@@ -1,0 +1,105 @@
+"""Benchmarks for the paper's own tables/figures (package-scale sim)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (WirelessConfig, balance, make_trace, simulate_hybrid,
+                        simulate_wired, sweep_all, summary)
+from repro.core.dse import INJECTIONS, THRESHOLDS, sweep
+from repro.core.workloads import WORKLOADS
+
+
+def _traces():
+    return {wl: make_trace(wl) for wl in WORKLOADS}
+
+
+def fig2_bottleneck(traces=None) -> dict:
+    """Fig. 2: % of execution time each element is the bottleneck."""
+    traces = traces or _traces()
+    rows = {}
+    for wl, tr in traces.items():
+        rows[wl] = simulate_wired(tr).bottleneck_share()
+    return rows
+
+
+def fig4_speedup(traces=None) -> dict:
+    """Fig. 4: best speedup per workload at 64 and 96 Gb/s wireless."""
+    traces = traces or _traces()
+    res = sweep_all(traces)
+    out = {}
+    for r in res:
+        out.setdefault(r.workload, {})[r.bandwidth_gbps] = r.best_speedup
+    out["_summary"] = {bw: {"mean": m, "max": mx}
+                       for bw, (m, mx) in summary(res).items()}
+    return out
+
+
+def fig5_heatmap(workload: str = "zfnet", bandwidth_gbps: int = 96,
+                 traces=None) -> dict:
+    """Fig. 5: speedup/degradation vs (distance threshold x injection)."""
+    traces = traces or {workload: make_trace(workload)}
+    tr = traces[workload]
+    base = simulate_wired(tr).total_time
+    grid = {}
+    for thr in THRESHOLDS:
+        row = []
+        for p in INJECTIONS:
+            cfg = WirelessConfig(bandwidth_gbps * 1e9 / 8, thr, p)
+            row.append(round(100 * (base / simulate_hybrid(tr, cfg)
+                                    .total_time - 1), 2))
+        grid[thr] = row
+    return {"workload": workload, "bandwidth_gbps": bandwidth_gbps,
+            "injections": list(INJECTIONS), "grid": grid}
+
+
+def balancer_vs_sweep(traces=None) -> dict:
+    """Beyond-paper: analytic balancer vs the paper's DSE grid."""
+    traces = traces or _traces()
+    out = {}
+    for wl, tr in traces.items():
+        sw = sweep(tr, wl, 96)
+        b = balance(tr, WirelessConfig(96e9 / 8))
+        out[wl] = {"swept_best": sw.best_speedup,
+                   "balancer": b.speedup_vs_wired,
+                   "injected_fraction": b.injected_fraction}
+    return out
+
+
+def mapping_sensitivity(traces=None) -> dict:
+    """The paper stresses mapping optimality (optimally-mapped workloads
+    are a precondition of its study): communication-aware stage boundaries
+    vs MAC-only balancing, wired execution time."""
+    from repro.core.mapper import pipeline_mapping
+    from repro.core.topology import build_topology
+    from repro.core.traffic import build_trace
+    from repro.core.workloads import get_workload
+    topo = build_topology()
+    out = {}
+    for wl in ("resnet50", "googlenet", "transformer", "zfnet"):
+        layers = get_workload(wl)
+        t_aware = simulate_wired(build_trace(
+            layers, pipeline_mapping(layers, topo), topo)).total_time
+        t_naive = simulate_wired(build_trace(
+            layers, pipeline_mapping(layers, topo, refine=False),
+            topo)).total_time
+        out[wl] = {"comm_aware_ms": t_aware * 1e3,
+                   "mac_only_ms": t_naive * 1e3,
+                   "ratio": t_naive / t_aware}
+    return out
+
+
+def edp_report(traces=None) -> dict:
+    """EDP (the GEMINI objective) wired vs hybrid-at-DSE-optimum."""
+    from repro.core.dse import sweep
+    traces = traces or _traces()
+    out = {}
+    for wl, tr in traces.items():
+        w = simulate_wired(tr)
+        r = sweep(tr, wl, 96)
+        h = simulate_hybrid(tr, WirelessConfig(
+            96e9 / 8, r.best_threshold, r.best_injection))
+        out[wl] = {"wired_edp_uJs": w.edp * 1e6,
+                   "hybrid_edp_uJs": h.edp * 1e6,
+                   "edp_gain": w.edp / h.edp if h.edp else 1.0}
+    return out

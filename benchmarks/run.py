@@ -1,0 +1,89 @@
+"""Benchmark driver: one function per paper table/figure + the LM-scale
+reports.  Prints ``name,us_per_call,derived`` CSV rows and writes the full
+structured results to experiments/bench_results.json."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def _run(name, fn, derived_fn):
+    t0 = time.time()
+    result = fn()
+    us = (time.time() - t0) * 1e6
+    derived = derived_fn(result)
+    print(f"{name},{us:.0f},{derived}")
+    return name, result
+
+
+def main() -> None:
+    from benchmarks import lm_scale, paper_figs
+    from repro.core import make_trace
+    from repro.core.workloads import WORKLOADS
+
+    traces = {wl: make_trace(wl) for wl in WORKLOADS}
+    results = {}
+    rows = [
+        ("fig2_bottleneck",
+         lambda: paper_figs.fig2_bottleneck(traces),
+         lambda r: "mean_nop_share=%.2f" % (
+             sum(v["nop"] for v in r.values()) / len(r))),
+        ("fig4_speedup",
+         lambda: paper_figs.fig4_speedup(traces),
+         lambda r: "mean64=%.1f%%;mean96=%.1f%%;max96=%.1f%%" % (
+             100 * (r["_summary"][64]["mean"] - 1),
+             100 * (r["_summary"][96]["mean"] - 1),
+             100 * (r["_summary"][96]["max"] - 1))),
+        ("fig5_heatmap",
+         lambda: paper_figs.fig5_heatmap(traces=traces),
+         lambda r: "peak=%.1f%%;worst=%.1f%%" % (
+             max(max(v) for v in r["grid"].values()),
+             min(min(v) for v in r["grid"].values()))),
+        ("balancer_vs_sweep",
+         lambda: paper_figs.balancer_vs_sweep(traces),
+         lambda r: "balancer_wins=%d/%d" % (
+             sum(v["balancer"] >= v["swept_best"] - 1e-9
+                 for v in r.values()), len(r))),
+        ("mapping_sensitivity",
+         paper_figs.mapping_sensitivity,
+         lambda r: "mac_only/comm_aware=%.2fx" % (
+             sum(v["ratio"] for v in r.values()) / len(r))),
+        ("edp_report",
+         lambda: paper_figs.edp_report(traces),
+         lambda r: "mean_edp_gain=%.3f;max=%.3f" % (
+             sum(v["edp_gain"] for v in r.values()) / len(r),
+             max(v["edp_gain"] for v in r.values()))),
+        ("roofline_table_baseline",
+         lm_scale.roofline_table,
+         lambda r: "cells=%d" % len(r)),
+        ("roofline_table_optimized",
+         lambda: lm_scale.roofline_table(
+             "pod", lm_scale.DRYRUN_DIR + "_opt"),
+         lambda r: "cells=%d" % len(r)),
+        ("hybrid_plane_report",
+         lambda: lm_scale.hybrid_plane_report(
+             "pod", lm_scale.DRYRUN_DIR + "_opt"),
+         lambda r: "cells=%d;max_coll_speedup=%.2f;mean_step_speedup=%.3f"
+         % (len(r), max((x["balancer_coll_speedup"] for x in r),
+                        default=1.0),
+            (sum(x["balancer_step_speedup"] for x in r) / max(1, len(r))))),
+        ("dryrun_summary",
+         lm_scale.dryrun_summary,
+         lambda r: "ok=%d/%d" % (r["ok"], r["total"])),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn, d in rows:
+        n, res = _run(name, fn, d)
+        results[n] = res
+
+    out = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench_results.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

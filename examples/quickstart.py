@@ -1,0 +1,52 @@
+"""Quickstart: train a reduced config for a few steps on CPU, checkpoint,
+restore, and decode a few tokens.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import restore, save
+from repro.configs import ARCHS, reduced
+from repro.data.pipeline import DataConfig, batch_for_model
+from repro.models import build_model
+from repro.optim.optimizers import OptimizerConfig
+from repro.runtime.serve import ServeConfig, generate
+from repro.runtime.train import TrainConfig, make_train_step
+
+
+def main():
+    cfg = reduced(ARCHS["smollm-360m"])
+    print(f"arch={cfg.name} (reduced) params~{cfg.param_count()/1e6:.2f}M")
+
+    tcfg = TrainConfig(optimizer=OptimizerConfig(lr=5e-3, warmup_steps=5,
+                                                 total_steps=100),
+                       remat=False)
+    step_fn, init_fn = make_train_step(cfg, tcfg)
+    state = init_fn(jax.random.PRNGKey(0))
+    jit_step = jax.jit(step_fn)
+    dcfg = DataConfig(seq_len=64, global_batch=8, vocab_size=cfg.vocab_size)
+
+    for s in range(20):
+        batch = {k: jnp.asarray(v)
+                 for k, v in batch_for_model(cfg, dcfg, s).items()}
+        state, m = jit_step(state, batch)
+        if s % 5 == 0:
+            print(f"step {s:3d}  ce={float(m['ce']):.3f}")
+
+    with tempfile.TemporaryDirectory() as d:
+        save(d, state, int(state["step"]))
+        state = restore(d, state)
+        print("checkpoint roundtrip ok, step", int(state["step"]))
+
+    prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    toks = generate(state["params"], cfg, prompt, n_tokens=8,
+                    scfg=ServeConfig(max_len=32))
+    print("generated:", toks.tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""The paper's experiment, end to end: bottleneck characterisation, the
+wireless DSE, the Fig. 5 heatmap, and the beyond-paper balancer — on the
+144-TOPS 3x3-chiplet platform of Table 1.
+
+    PYTHONPATH=src python examples/wireless_dse.py [workload]
+"""
+
+import sys
+
+from repro.core import (WirelessConfig, balance, make_trace, simulate_wired,
+                        sweep)
+from repro.core.dse import INJECTIONS, THRESHOLDS
+from repro.core.simulator import simulate_hybrid
+from repro.core.workloads import WORKLOADS
+
+
+def main():
+    wl = sys.argv[1] if len(sys.argv) > 1 else "zfnet"
+    assert wl in WORKLOADS, f"pick one of {list(WORKLOADS)}"
+    tr = make_trace(wl)
+
+    base = simulate_wired(tr)
+    print(f"== {wl} on 3x3 x 144 TOPS (wired baseline) ==")
+    print(f"execution time: {base.total_time*1e3:.3f} ms")
+    print("bottleneck shares:",
+          {k: f"{v:.0%}" for k, v in base.bottleneck_share().items()
+           if v > 0.005})
+
+    for bw in (64, 96):
+        r = sweep(tr, wl, bw)
+        print(f"\n== wireless {bw} Gb/s: DSE best speedup "
+              f"{100*(r.best_speedup-1):.1f}% "
+              f"(threshold={r.best_threshold}, "
+              f"injection={r.best_injection}) ==")
+
+    print("\nthreshold x injection heatmap (% speedup, 96 Gb/s):")
+    b = base.total_time
+    header = "thr\\p " + " ".join(f"{p:5.2f}" for p in INJECTIONS)
+    print(header)
+    for thr in THRESHOLDS:
+        row = []
+        for p in INJECTIONS:
+            h = simulate_hybrid(tr, WirelessConfig(96e9 / 8, thr, p))
+            row.append(100 * (b / h.total_time - 1))
+        print(f"  {thr}   " + " ".join(f"{v:5.1f}" for v in row))
+
+    bal = balance(tr, WirelessConfig(96e9 / 8))
+    print(f"\nbeyond-paper balancer: {100*(bal.speedup_vs_wired-1):.1f}% "
+          f"(injected {bal.injected_fraction:.0%} of eligible volume, "
+          f"{bal.sim.wireless_energy_j*1e6:.1f} uJ wireless energy)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .checkpointer import AsyncCheckpointer, latest_steps, restore, save

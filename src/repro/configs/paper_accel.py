@@ -1,0 +1,6 @@
+"""The paper's own platform config (Table 1), for the package-scale sim."""
+
+from repro.core.topology import AcceleratorConfig
+
+CONFIG_64G = AcceleratorConfig(wireless_bw=64e9 / 8)
+CONFIG_96G = AcceleratorConfig(wireless_bw=96e9 / 8)

@@ -1,0 +1,20 @@
+"""Core: the paper's contribution.
+
+Package-scale reproduction (GEMINI-like simulator + wireless overlay) and
+the TPU-scale adaptation (hybrid collective plane scheduler + balancer).
+"""
+
+from .topology import AcceleratorConfig, Topology, build_topology
+from .wireless import WirelessConfig, select_wireless, eligibility
+from .simulator import (SimResult, make_trace, simulate_hybrid,
+                        simulate_wired, speedup)
+from .dse import sweep, sweep_all, summary, SweepResult
+from .balancer import balance, BalancerResult
+
+__all__ = [
+    "AcceleratorConfig", "Topology", "build_topology",
+    "WirelessConfig", "select_wireless", "eligibility",
+    "SimResult", "make_trace", "simulate_hybrid", "simulate_wired",
+    "speedup", "sweep", "sweep_all", "summary", "SweepResult",
+    "balance", "BalancerResult",
+]

@@ -1,0 +1,63 @@
+"""Design-space exploration: the paper's parameter sweeps (SIV-A).
+
+Sweeps distance threshold in {1..4} x injection probability in
+{0.10..0.80 step 0.05} x wireless bandwidth in {64, 96} Gb/s, per workload,
+and reports the near-optimal configuration — exactly the exploration behind
+the paper's Fig. 4 and Fig. 5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .simulator import TrafficTrace, simulate_hybrid, simulate_wired
+from .wireless import WirelessConfig
+
+THRESHOLDS = (1, 2, 3, 4)
+INJECTIONS = tuple(round(0.10 + 0.05 * i, 2) for i in range(15))  # .10..._.80
+BANDWIDTHS_GBPS = (64, 96)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    workload: str
+    bandwidth_gbps: int
+    # speedup grid indexed [threshold, injection]
+    grid: np.ndarray
+    best_speedup: float
+    best_threshold: int
+    best_injection: float
+
+
+def sweep(trace: TrafficTrace, workload: str,
+          bandwidth_gbps: int) -> SweepResult:
+    base = simulate_wired(trace).total_time
+    grid = np.zeros((len(THRESHOLDS), len(INJECTIONS)))
+    for ti, thr in enumerate(THRESHOLDS):
+        for pi, p in enumerate(INJECTIONS):
+            cfg = WirelessConfig(bandwidth=bandwidth_gbps * 1e9 / 8,
+                                 distance_threshold=thr, injection_prob=p)
+            grid[ti, pi] = base / simulate_hybrid(trace, cfg).total_time
+    ti, pi = np.unravel_index(int(grid.argmax()), grid.shape)
+    return SweepResult(workload, bandwidth_gbps, grid,
+                       float(grid.max()), THRESHOLDS[ti], INJECTIONS[pi])
+
+
+def sweep_all(traces: Dict[str, TrafficTrace]) -> List[SweepResult]:
+    out = []
+    for wl, trace in traces.items():
+        for bw in BANDWIDTHS_GBPS:
+            out.append(sweep(trace, wl, bw))
+    return out
+
+
+def summary(results: List[SweepResult]) -> Dict[int, Tuple[float, float]]:
+    """bandwidth -> (mean best speedup, max best speedup) over workloads."""
+    out = {}
+    for bw in BANDWIDTHS_GBPS:
+        sp = [r.best_speedup for r in results if r.bandwidth_gbps == bw]
+        out[bw] = (float(np.mean(sp)), float(np.max(sp)))
+    return out

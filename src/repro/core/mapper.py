@@ -1,0 +1,140 @@
+"""Spatial mapping of workload layers onto chiplets (GEMINI-style, simplified).
+
+GEMINI co-explores mapping with architecture using SET; its headline
+property for our purposes is that every layer is *spatially partitioned*
+across the chiplet array (output-channel / output-row tiling) and that
+tensors produced under one partitioning are multicast to the consumers of
+the next.  We implement that canonical spatial mapping:
+
+- every layer with MACs is split across all compute chiplets
+  (output-channel tiling, equal shares);
+- pure data-movement layers (concat/add joins) inherit the partitioning of
+  their producers, so an aligned join generates no NoP traffic;
+- tensors consumed "far" in program order (> `spill_window` layers after
+  production) are spilled to DRAM and re-fetched — GEMINI's
+  communication-aware data placement heuristic.
+
+The mapper returns, per layer, the chiplet share vector.  The traffic
+generator (`traffic.py`) turns mapping + graph into messages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+from .topology import Topology
+from .workloads import Layer
+
+
+@dataclasses.dataclass
+class Mapping:
+    """Per-layer chiplet placement."""
+
+    chiplets: List[Sequence[int]]      # chiplet ids executing each layer
+    shares: List[np.ndarray]           # fraction of the layer per chiplet
+    spill_window: int = 4              # program-order distance before DRAM spill
+
+    def share_of(self, layer: int, chiplet: int) -> float:
+        seq = list(self.chiplets[layer])
+        if chiplet not in seq:
+            return 0.0
+        return float(self.shares[layer][seq.index(chiplet)])
+
+
+def spatial_mapping(layers: List[Layer], topo: Topology,
+                    spill_window: int = 4) -> Mapping:
+    """Canonical GEMINI-like mapping: full spatial split of every layer."""
+    n = topo.config.n_chiplets
+    all_chips = tuple(range(n))
+    uniform = np.full((n,), 1.0 / n)
+    chiplets, shares = [], []
+    for lyr in layers:
+        if lyr.macs == 0 and lyr.weights == 0:
+            # join/identity layer: inherits producer partitioning
+            chiplets.append(all_chips)
+            shares.append(uniform)
+        else:
+            chiplets.append(all_chips)
+            shares.append(uniform)
+    return Mapping(chiplets, shares, spill_window)
+
+
+def snake_order(topo: Topology) -> List[int]:
+    """Boustrophedon chiplet order: consecutive pipeline stages adjacent."""
+    rows, cols = topo.config.grid
+    order = []
+    for r in range(rows):
+        cs = range(cols) if r % 2 == 0 else range(cols - 1, -1, -1)
+        order.extend(r * cols + c for c in cs)
+    return order
+
+
+def pipeline_mapping(layers: List[Layer], topo: Topology,
+                     n_stages: int | None = None,
+                     spill_window: int = 6, refine: bool = True) -> Mapping:
+    """GEMINI/SET-style inter-layer pipelined mapping (the default).
+
+    Layers are packed into MAC-balanced contiguous pipeline stages; stage i
+    runs on one chiplet, placed in snake order so consecutive stages are
+    mesh neighbours (SET's locality-aware placement).  Cross-stage tensor
+    edges become NoP transfers; *fan-out* edges reaching several stages
+    become multicast — the traffic pattern the paper identifies as the NoP
+    congestion source.
+    """
+    n = topo.config.n_chiplets
+    # pipeline depth never exceeds half the layer count: a sensible mapper
+    # does not spray a 10-layer workload over 9 single-layer stages
+    n_stages = min(n_stages or n, n, max(1, len(layers) // 3))
+    order = snake_order(topo)
+    total = sum(l.macs for l in layers) or 1.0
+    # MAC-balanced contiguous segmentation...
+    acc, stage = 0.0, 0
+    stage_of: List[int] = []
+    for lyr in layers:
+        stage_of.append(stage)
+        acc += lyr.macs
+        while (stage < n_stages - 1
+               and acc >= total * (stage + 1) / n_stages):
+            stage += 1
+    # ...refined communication-aware: nudge each stage boundary (within a
+    # small window) to the cut with the smallest crossing tensor, as a
+    # mapping/communication co-optimising mapper (GEMINI/SET) would.
+    W = max(1, len(layers) // (4 * n_stages)) if refine else 0
+    for s in range(1, n_stages):
+        if not W:
+            break
+        idxs = [i for i, st in enumerate(stage_of) if st == s]
+        if not idxs:
+            continue
+        b = idxs[0]
+        lo, hi = max(1, b - W), min(len(layers) - 1, b + W)
+        best = min(range(lo, hi + 1),
+                   key=lambda i: layers[i - 1].act_out)
+        for i in range(min(b, best), max(b, best)):
+            stage_of[i] = s if best < b else s - 1
+    # every stage owns an equal contiguous chiplet group (all chiplets are
+    # used even when the pipeline is shallow)
+    k = n // n_stages
+    groups = [tuple(order[s * k:(s + 1) * k]) or (order[0],)
+              for s in range(n_stages)]
+    chiplets: List[Sequence[int]] = [groups[s] for s in stage_of]
+    shares = [np.full((len(groups[s]),), 1.0 / len(groups[s]))
+              for s in stage_of]
+    # Weight-heavy layers (big FC / gate matrices) are spatially spread so
+    # per-chiplet weight slices fit the SRAM budget — widening outward from
+    # the layer's own stage group (GEMINI splits such layers spatially).
+    from .traffic import WEIGHT_SRAM_BYTES  # calibrated constant
+    for i, lyr in enumerate(layers):
+        if lyr.weights > WEIGHT_SRAM_BYTES:
+            need = int(np.ceil(lyr.weights / WEIGHT_SRAM_BYTES))
+            w = k
+            while w < min(need, n):
+                w += k
+            w = min(w, n)
+            start = stage_of[i] * k
+            chiplets[i] = tuple(order[(start + j) % n] for j in range(w))
+            shares[i] = np.full((w,), 1.0 / w)
+    return Mapping(list(chiplets), shares, spill_window)

@@ -1,0 +1,149 @@
+"""GEMINI-style layer-wise bottleneck simulator, wired and hybrid.
+
+Per paper SIII-C: GEMINI is not cycle-accurate.  Per layer it computes the
+compute time, the DRAM time, and aggregated NoC/NoP interconnect times,
+declares the max of these the layer's bottleneck, and sums the per-layer
+maxima into the total execution time.  We add the wireless channel as one
+more per-layer term and keep the paper's dual-path accounting: wireless-
+designated messages are ALSO costed on the wired path for the baseline, so
+the speedup compares against unmodified GEMINI.
+
+The wired NoP term models link congestion explicitly: per-layer byte loads
+are accumulated on each directed XY-mesh link and the NoP time is the most
+loaded link's service time — this is the "congested bisection links"
+mechanism the paper identifies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from .mapper import pipeline_mapping, spatial_mapping
+from .topology import AcceleratorConfig, build_topology
+from .traffic import TrafficTrace, build_trace
+from .wireless import WirelessConfig, select_wireless, wireless_energy_joules
+from .workloads import get_workload
+
+BOTTLENECKS = ("compute", "dram", "noc", "nop", "wireless")
+
+# Energy model (GEMINI/Accelergy-style constants): the paper's evaluation
+# framework optimises EDP; we account energy alongside latency.
+PJ_PER_MAC = 0.5            # bf16 MAC @ 7-nm class
+PJ_PER_BIT_DRAM = 15.0      # DRAM access + interface
+PJ_PER_BIT_NOP_HOP = 1.5    # wired D2D per hop (interposer SerDes)
+PJ_PER_BIT_NOC = 0.3        # on-chip mesh, aggregate per transported bit
+PJ_PER_BIT_WIRELESS = 1.0   # mm-wave transceiver (paper SI: ~1 pJ/bit)
+
+
+@dataclasses.dataclass
+class LayerReport:
+    time: float
+    bottleneck: str
+
+
+@dataclasses.dataclass
+class SimResult:
+    total_time: float
+    layer_times: np.ndarray
+    bottleneck: List[str]
+    wireless_bytes: float = 0.0
+    wireless_energy_j: float = 0.0
+    energy_j: float = 0.0            # total platform energy per inference
+
+    @property
+    def edp(self) -> float:
+        """Energy-delay product (the GEMINI objective)."""
+        return self.energy_j * self.total_time
+
+    def bottleneck_share(self) -> Dict[str, float]:
+        """Fraction of total time attributed to each bottleneck (Fig. 2)."""
+        shares = {b: 0.0 for b in BOTTLENECKS}
+        for t, b in zip(self.layer_times, self.bottleneck):
+            shares[b] += float(t)
+        tot = self.total_time or 1.0
+        return {b: v / tot for b, v in shares.items()}
+
+
+def _finalize(trace: TrafficTrace, link_loads: np.ndarray,
+              t_wireless: np.ndarray) -> SimResult:
+    if link_loads.size:
+        cut_mat, cut_bw = trace.cut_matrix()
+        # worst directed mesh-cut service time ("congested bisection links")
+        t_nop = (link_loads @ cut_mat / cut_bw).max(axis=1)
+    else:
+        t_nop = np.zeros(trace.n_layers)
+    stack = np.stack([trace.t_compute, trace.t_dram, trace.t_noc, t_nop,
+                      t_wireless])
+    layer_times = stack.max(axis=0)
+    which = stack.argmax(axis=0)
+    return SimResult(
+        total_time=float(layer_times.sum()),
+        layer_times=layer_times,
+        bottleneck=[BOTTLENECKS[i] for i in which],
+    )
+
+
+def energy_joules(trace: TrafficTrace, link_loads: np.ndarray,
+                  wireless_bytes: float = 0.0) -> float:
+    """Platform energy per inference: compute + DRAM + NoC + NoP + WL."""
+    e = trace.total_macs * PJ_PER_MAC * 1e-12
+    e += float(trace.dram_bytes.sum()) * 8 * PJ_PER_BIT_DRAM * 1e-12
+    e += trace.noc_bytes * 8 * PJ_PER_BIT_NOC * 1e-12
+    e += float(link_loads.sum()) * 8 * PJ_PER_BIT_NOP_HOP * 1e-12
+    e += wireless_bytes * 8 * PJ_PER_BIT_WIRELESS * 1e-12
+    return e
+
+
+def simulate_wired(trace: TrafficTrace) -> SimResult:
+    """Baseline: everything over the wired NoP."""
+    loads = trace.baseline_link_loads()
+    res = _finalize(trace, loads, np.zeros(trace.n_layers))
+    res.energy_j = energy_joules(trace, loads)
+    return res
+
+
+def simulate_hybrid(trace: TrafficTrace, wcfg: WirelessConfig) -> SimResult:
+    """Hybrid wired+wireless under the paper's decision function."""
+    injected = select_wireless(trace, wcfg)
+
+    # wired plane: baseline loads minus the injected messages' contributions
+    loads = trace.baseline_link_loads()
+    inj_edges = injected[trace.inc_msg]
+    np.subtract.at(
+        loads,
+        (trace.layer[trace.inc_msg[inj_edges]], trace.inc_link[inj_edges]),
+        trace.nbytes[trace.inc_msg[inj_edges]],
+    )
+
+    # wireless plane: single shared channel, volume/bandwidth per layer
+    wl_bytes = np.zeros(trace.n_layers)
+    np.add.at(wl_bytes, trace.layer[injected], trace.nbytes[injected])
+    t_wireless = wl_bytes / wcfg.bandwidth
+
+    res = _finalize(trace, loads, t_wireless)
+    res.wireless_bytes = float(wl_bytes.sum())
+    res.wireless_energy_j = wireless_energy_joules(trace, injected, wcfg)
+    res.energy_j = energy_joules(trace, loads, res.wireless_bytes)
+    return res
+
+
+def make_trace(workload: str, acc: AcceleratorConfig | None = None,
+               mapping: str = "pipeline") -> TrafficTrace:
+    """Convenience: workload name -> traffic trace on the default platform.
+
+    mapping: "pipeline" (GEMINI/SET-style, default) or "spatial" (full
+    spatial split; the mapping-sensitivity contrast point).
+    """
+    topo = build_topology(acc)
+    layers = get_workload(workload)
+    mapper = pipeline_mapping if mapping == "pipeline" else spatial_mapping
+    return build_trace(layers, mapper(layers, topo), topo)
+
+
+def speedup(trace: TrafficTrace, wcfg: WirelessConfig) -> float:
+    base = simulate_wired(trace).total_time
+    hybrid = simulate_hybrid(trace, wcfg).total_time
+    return base / hybrid

@@ -1,0 +1,181 @@
+"""Package-scale topology for the wireless-enabled multi-chiplet accelerator.
+
+Faithful to the paper's Table 1 platform: a GxG grid of compute chiplets
+(3x3 by default), four DRAM chiplets on the package periphery, an XY-mesh
+NoP between chiplets, an XY-mesh NoC inside each chiplet, and one antenna +
+transceiver at the geometric center of every compute chiplet and DRAM
+module (paper SIII-B1).
+
+Distances are expressed in NoP hops (the unit the paper's distance
+threshold uses).  Antenna coordinates are derived from the physical layout
+so the wireless plane is single-hop between any two antennas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Tuple
+
+Coord = Tuple[int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorConfig:
+    """Platform parameters (paper Table 1 defaults).
+
+    Rates are bytes/second internally; the paper quotes Gb/s for NoC/NoP/
+    wireless and GB/s for DRAM.
+    """
+
+    grid: Tuple[int, int] = (3, 3)          # compute chiplets
+    n_dram: int = 4                          # DRAM chiplets (one per side)
+    tops_total: float = 144e12               # 144 TOPS across the package
+    dram_bw_per_chiplet: float = 16e9        # 16 GB/s per DRAM chiplet
+    nop_bw_per_side: float = 32e9 / 8        # 32 Gb/s per mesh side -> B/s
+    noc_bw_per_port: float = 64e9 / 8        # 64 Gb/s per NoC port -> B/s
+    wireless_bw: float = 64e9 / 8            # 64 or 96 Gb/s -> B/s
+    pe_mesh: Tuple[int, int] = (16, 16)      # PEs per chiplet (NoC nodes)
+    chiplet_mm: float = 5.0                  # chiplet edge length (layout only)
+    freq_ghz: float = 1.0
+
+    @property
+    def n_chiplets(self) -> int:
+        return self.grid[0] * self.grid[1]
+
+    @property
+    def tops_per_chiplet(self) -> float:
+        return self.tops_total / self.n_chiplets
+
+    @property
+    def dram_bw_total(self) -> float:
+        return self.dram_bw_per_chiplet * self.n_dram
+
+    # --- NoP bisection: for an RxC XY mesh, the vertical bisection cut has
+    # R links; multicast/reduction flows that cross the package midline all
+    # share them (paper SI: "congested bisection links").
+    @property
+    def nop_bisection_bw(self) -> float:
+        return self.grid[0] * self.nop_bw_per_side
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    config: AcceleratorConfig
+    chiplet_coords: Tuple[Coord, ...]
+    dram_coords: Tuple[Coord, ...]           # virtual grid coords off the edges
+    antenna_xy_mm: Tuple[Tuple[float, float], ...]  # one per chiplet then DRAM
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.chiplet_coords) + len(self.dram_coords)
+
+    def _is_dram(self, node: int) -> bool:
+        return node >= len(self.chiplet_coords)
+
+    def route(self, src: int, dst: int,
+              order: str = "xy") -> List[Tuple[Coord, Coord]]:
+        """Directed XY (dimension-ordered) mesh route between two nodes.
+
+        DRAM chiplets attach to every edge router along their package side
+        with enough attach links to carry their full 16 GB/s (i.e. the
+        attach hop is DRAM-bandwidth-limited, which `t_dram` already
+        accounts for) — so routes to/from DRAM contribute only the *mesh*
+        links beyond the aligned edge router.
+        """
+        dc = self._coord(dst)
+        sc = self._coord(src)
+        links: List[Tuple[Coord, Coord]] = []
+        if self._is_dram(src):
+            sc = self._grid_entry(src, dc)
+        if self._is_dram(dst):
+            dc = self._grid_entry(dst, sc)
+        x, y = sc
+        dims = (0, 1) if order == "xy" else (1, 0)
+        for dim in dims:
+            if dim == 0:
+                step = 1 if dc[0] > x else -1
+                while x != dc[0]:
+                    links.append(((x, y), (x + step, y)))
+                    x += step
+            else:
+                step = 1 if dc[1] > y else -1
+                while y != dc[1]:
+                    links.append(((x, y), (x, y + step)))
+                    y += step
+        return links
+
+    def _grid_entry(self, dram: int, toward: Coord) -> Coord:
+        """Edge-router grid coordinate where a DRAM's traffic enters."""
+        r, c = self._coord(dram)
+        rows, cols = self.config.grid
+        if r == -1:
+            return (0, min(max(toward[1], 0), cols - 1))
+        if r == rows:
+            return (rows - 1, min(max(toward[1], 0), cols - 1))
+        if c == -1:
+            return (min(max(toward[0], 0), rows - 1), 0)
+        return (min(max(toward[0], 0), rows - 1), cols - 1)
+
+    def nop_hops(self, a: int, b: int) -> int:
+        """XY-route hop distance between two nodes (DRAM attach-aware)."""
+        return len(self.route(a, b))
+
+    def multicast_route(self, src: int, dsts: List[int],
+                        order: str = "xy") -> List[Tuple[Coord, Coord]]:
+        """Directed link set of a dimension-ordered multicast tree."""
+        links = set()
+        for d in dsts:
+            links.update(self.route(src, d, order))
+        return sorted(links)
+
+    def multicast_hops(self, src: int, dsts: List[int]) -> int:
+        """Byte-hop multiplier (distinct links) of an XY multicast tree."""
+        return len(self.multicast_route(src, dsts))
+
+    def max_unicast_hops(self, src: int, dsts: List[int]) -> int:
+        return max(self.nop_hops(src, d) for d in dsts)
+
+    def _coord(self, node: int) -> Coord:
+        n_chip = len(self.chiplet_coords)
+        if node < n_chip:
+            return self.chiplet_coords[node]
+        return self.dram_coords[node - n_chip]
+
+
+def build_topology(config: AcceleratorConfig | None = None) -> Topology:
+    cfg = config or AcceleratorConfig()
+    rows, cols = cfg.grid
+    chiplets = tuple(itertools.product(range(rows), range(cols)))
+
+    # Four DRAM chiplets: one centred on each package side (paper Fig. 1).
+    mid_r, mid_c = rows // 2, cols // 2
+    dram = ((-1, mid_c), (rows, mid_c), (mid_r, -1), (mid_r, cols))[: cfg.n_dram]
+
+    # Antenna at the centre of every chiplet / DRAM (paper SIII-B1): physical
+    # coordinates derived from grid position and chiplet pitch.
+    pitch = cfg.chiplet_mm + 1.0  # 1 mm inter-chiplet spacing
+    ant = tuple(
+        (c[1] * pitch + cfg.chiplet_mm / 2, c[0] * pitch + cfg.chiplet_mm / 2)
+        for c in chiplets + dram
+    )
+    return Topology(cfg, chiplets, dram, ant)
+
+
+def nearest_dram(topo: Topology, chiplet: int) -> int:
+    """DRAM node id (global) closest to a chiplet, used for weight fetch."""
+    n_chip = len(topo.chiplet_coords)
+    best = min(
+        range(n_chip, n_chip + len(topo.dram_coords)),
+        key=lambda d: topo.nop_hops(chiplet, d),
+    )
+    return best
+
+
+def chiplet_neighbourhood(topo: Topology) -> Dict[int, List[int]]:
+    """Adjacency (1-hop) map over compute chiplets, for mapping locality."""
+    n = len(topo.chiplet_coords)
+    return {
+        i: [j for j in range(n) if j != i and topo.nop_hops(i, j) == 1]
+        for i in range(n)
+    }

@@ -1,0 +1,275 @@
+"""Message generation: (workload graph x mapping) -> NoP message trace.
+
+Traffic model (GEMINI/SIMBA conventions):
+
+- **Weights** are resident in chiplet SRAM when a layer's weights fit the
+  per-chiplet buffer budget (loaded once, amortised across inferences —
+  SIMBA weight-stationary style).  Oversized layers (big FC / LSTM gates)
+  are *streamed* per inference: slices striped across all DRAM chiplets,
+  unicast to the executing chiplet (DRAM time + NoP entry links).
+- **Activations** crossing pipeline stages are sent once, at production
+  time, as a single message to the set of consumer chiplets — a multicast
+  when the fan-out reaches >1 remote chiplet.  Same-chiplet edges are free
+  (tile-local; halo traffic is folded into the NoC term).
+- Tensors consumed more than `spill_window` layers after production, or
+  larger than the activation buffer, are **spilled**: DRAM write at
+  production + DRAM read at consumption.
+
+Produces a flat, numpy-vectorised `TrafficTrace` so the wireless DSE
+(hundreds of configurations) re-costs messages without re-walking the
+graph.
+
+Node ids: 0..C-1 compute chiplets, C..C+D-1 DRAM chiplets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .mapper import Mapping
+from .topology import Topology, nearest_dram
+from .workloads import Layer
+
+Link = Tuple[Tuple[int, int], Tuple[int, int]]  # directed (from_xy, to_xy)
+
+# SRAM budgets per chiplet (SIMBA-like global buffer) and model constants,
+# calibrated against paper Fig. 2 (see tests/test_paper_repro.py).
+WEIGHT_SRAM_BYTES = 4 * 2**20     # weights resident below this size
+ACT_SRAM_BYTES = 32 * 2**20       # live-tensor buffer before DRAM spill
+NOC_PARALLEL = 16.0               # concurrent NoC injection ports per chiplet
+COMPUTE_EFFICIENCY = 0.90         # achieved fraction of peak MACs
+PACKET_BYTES = 64 * 1024          # NoP packetisation granularity: the
+# injection-probability filter operates per packet (as in the simulator's
+# per-message accounting), so large tensors can be *partially* offloaded.
+
+
+@dataclasses.dataclass
+class Message:
+    layer: int                    # layer whose timeline carries the cost
+    src: int
+    dsts: Tuple[int, ...]
+    nbytes: float
+    kind: str                     # "wstream" | "act" | "spill_w" | "spill_r"
+
+    @property
+    def is_multicast(self) -> bool:
+        return len(self.dsts) > 1
+
+
+@dataclasses.dataclass
+class TrafficTrace:
+    """Vectorised message arrays + per-layer wireless-independent costs."""
+
+    topo: Topology
+    n_layers: int
+    link_index: Dict[Link, int]
+    # per-message arrays
+    layer: np.ndarray          # int32 (M,)
+    nbytes: np.ndarray         # float64 (M,)
+    is_multicast: np.ndarray   # bool (M,)
+    is_multichip: np.ndarray   # bool (M,)
+    max_hops: np.ndarray       # int32 (M,) max NoP hops src->any dst
+    # sparse (message -> link) incidence
+    inc_msg: np.ndarray        # int32 (E,)
+    inc_link: np.ndarray       # int32 (E,)
+    # per-layer wireless-independent times (seconds)
+    t_compute: np.ndarray
+    t_dram: np.ndarray
+    t_noc: np.ndarray
+    dram_bytes: np.ndarray
+    messages: List[Message]
+    total_macs: float = 0.0        # for the energy model
+    noc_bytes: float = 0.0
+
+    @property
+    def n_links(self) -> int:
+        return len(self.link_index)
+
+    def baseline_link_loads(self) -> np.ndarray:
+        """(n_layers, n_links) byte loads with everything wired."""
+        loads = np.zeros((self.n_layers, self.n_links))
+        np.add.at(loads, (self.layer[self.inc_msg], self.inc_link),
+                  self.nbytes[self.inc_msg])
+        return loads
+
+    def cut_matrix(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(n_links, n_cuts) incidence + per-cut bandwidth (B/s).
+
+        NoP congestion is evaluated per directed mesh *cut* (the paper:
+        "multicast patterns leading to congested bisection links"): between
+        every pair of adjacent rows/columns, per direction.  A cut of k
+        parallel links serves the bytes crossing it at k * link_bw.
+        """
+        rows, cols = self.topo.config.grid
+        bw = self.topo.config.nop_bw_per_side
+        cuts = []          # (axis, boundary, direction)
+        for c in range(cols - 1):
+            cuts.append(("v", c, +1))
+            cuts.append(("v", c, -1))
+        for r in range(rows - 1):
+            cuts.append(("h", r, +1))
+            cuts.append(("h", r, -1))
+        mat = np.zeros((len(self.link_index), len(cuts)))
+        for (a, b), li in self.link_index.items():
+            for ci, (axis, bnd, d) in enumerate(cuts):
+                if axis == "v" and a[1] == bnd + (d < 0) and b[1] == bnd + (d > 0):
+                    mat[li, ci] = 1.0
+                if axis == "h" and a[0] == bnd + (d < 0) and b[0] == bnd + (d > 0):
+                    mat[li, ci] = 1.0
+        n_par = np.array([rows if axis == "v" else cols
+                          for axis, _, _ in cuts], float)
+        return mat, n_par * bw
+
+
+def _streamed(lyr: Layer) -> bool:
+    return lyr.weights > WEIGHT_SRAM_BYTES
+
+
+def generate_messages(layers: List[Layer], mapping: Mapping,
+                      topo: Topology) -> List[Message]:
+    msgs: List[Message] = []
+    n_dram = len(topo.dram_coords)
+    n_chip = topo.config.n_chiplets
+
+    for li, lyr in enumerate(layers):
+        placed = list(mapping.chiplets[li])
+
+        # 1) streamed weights: striped over all DRAM chiplets, unicast in.
+        if lyr.weights and _streamed(lyr):
+            for d in range(n_dram):
+                for c in placed:
+                    msgs.append(Message(
+                        li, n_chip + d, (c,),
+                        lyr.weights * mapping.share_of(li, c) / n_dram,
+                        "wstream"))
+
+        # 2) output activation transport, charged at production time.
+        near: Dict[int, set] = {c: set() for c in placed}  # src -> dst set
+        for ci in lyr.consumers:
+            consumer_chips = list(mapping.chiplets[ci])
+            spilled = (ci - li > mapping.spill_window
+                       or lyr.act_out > ACT_SRAM_BYTES)
+            if set(consumer_chips) == set(placed) and not spilled:
+                # aligned partitions (same chiplet group, matching tiling):
+                # tile-local consumption, no NoP transport
+                continue
+            if spilled:
+                # DRAM spill: write once (at production), read at consumption
+                for c in placed:
+                    share = lyr.act_out * mapping.share_of(li, c)
+                    msgs.append(Message(li, c, (nearest_dram(topo, c),),
+                                        share, "spill_w"))
+                for c in consumer_chips:
+                    msgs.append(Message(
+                        ci, nearest_dram(topo, c), (c,),
+                        lyr.act_out / len(consumer_chips), "spill_r"))
+                continue
+            for c in placed:
+                for d in consumer_chips:
+                    if d != c:
+                        near[c].add(d)
+        # one message per source chiplet covering every near consumer —
+        # multicast if the fan-out reaches more than one remote chiplet
+        for c, dsts in near.items():
+            if dsts:
+                share = lyr.act_out * mapping.share_of(li, c)
+                msgs.append(Message(li, c, tuple(sorted(dsts)), share, "act"))
+    # drop spill-writes duplicated per consumer edge: a tensor is written to
+    # DRAM once even if several late consumers read it
+    seen = set()
+    dedup: List[Message] = []
+    for m in msgs:
+        if m.kind == "spill_w":
+            key = (m.layer, m.src, m.dsts)
+            if key in seen:
+                continue
+            seen.add(key)
+        dedup.append(m)
+    return dedup
+
+
+def build_trace(layers: List[Layer], mapping: Mapping,
+                topo: Topology) -> TrafficTrace:
+    cfg = topo.config
+    msgs = generate_messages(layers, mapping, topo)
+    n_layers = len(layers)
+
+    # --- packetise: the wireless injection filter operates per packet, so
+    # large tensors can be partially offloaded (as in real NoP traffic).
+    link_index: Dict[Link, int] = {}
+    inc_msg: List[int] = []
+    inc_link: List[int] = []
+    layer_l: List[int] = []
+    nbytes_l: List[float] = []
+    is_mc_l: List[bool] = []
+    is_xchip_l: List[bool] = []
+    max_hops_l: List[int] = []
+
+    for m in msgs:
+        hops = max(topo.nop_hops(m.src, d) for d in m.dsts)
+        # chiplet-to-chiplet activation tensors fan out to the destination
+        # chiplet's PE array: multicast in the NoC/NoP sense (paper SIII-B2)
+        # even with a single destination chiplet.  DMA-style weight streams
+        # and DRAM spills are point-to-point.
+        mc = m.is_multicast or m.kind == "act"
+        xchip = any(d != m.src for d in m.dsts)
+        # activation tensors are dual-path routed (XY+YX, standard NoP load
+        # balancing); DMA streams keep the single dimension-ordered path.
+        orders = ("xy", "yx") if m.kind == "act" else ("xy",)
+        for order in orders:
+            route = [link_index.setdefault(link, len(link_index))
+                     for link in topo.multicast_route(m.src, list(m.dsts),
+                                                      order)]
+            vol = m.nbytes / len(orders)
+            n_pkt = max(1, int(np.ceil(vol / PACKET_BYTES)))
+            per = vol / n_pkt
+            for _ in range(n_pkt):
+                pid = len(layer_l)
+                layer_l.append(m.layer)
+                nbytes_l.append(per)
+                is_mc_l.append(mc)
+                is_xchip_l.append(xchip)
+                max_hops_l.append(hops)
+                inc_msg.extend([pid] * len(route))
+                inc_link.extend(route)
+
+    layer_arr = np.asarray(layer_l, np.int32)
+    nbytes = np.asarray(nbytes_l)
+    is_mc = np.asarray(is_mc_l, bool)
+    is_xchip = np.asarray(is_xchip_l, bool)
+    max_hops = np.asarray(max_hops_l, np.int32)
+
+    # --- wireless-independent per-layer terms ---
+    # compute: layer runs on its mapped chiplets at the derated peak rate
+    t_comp = np.array([
+        2.0 * l.macs / (cfg.tops_per_chiplet * max(1, len(mapping.chiplets[i]))
+                        * COMPUTE_EFFICIENCY)
+        for i, l in enumerate(layers)])
+    dram_bytes = np.zeros(n_layers)
+    for m in msgs:
+        if m.kind in ("wstream", "spill_r", "spill_w"):
+            dram_bytes[m.layer] += m.nbytes
+    t_dram = dram_bytes / cfg.dram_bw_total
+    # NoC: tile in + tile out + (streamed) weight slice through the
+    # chiplet-local mesh; chiplets operate in parallel.
+    t_noc = np.zeros(n_layers)
+    for i, l in enumerate(layers):
+        n_exec = max(1, len(mapping.chiplets[i]))
+        w_local = l.weights / n_exec if _streamed(l) else 0.0
+        t_noc[i] = ((l.act_in + l.act_out) / n_exec + w_local) \
+            / (cfg.noc_bw_per_port * NOC_PARALLEL)
+
+    return TrafficTrace(
+        topo=topo, n_layers=n_layers, link_index=link_index,
+        layer=layer_arr, nbytes=nbytes, is_multicast=is_mc,
+        is_multichip=is_xchip, max_hops=max_hops,
+        inc_msg=np.asarray(inc_msg, np.int32),
+        inc_link=np.asarray(inc_link, np.int32),
+        t_compute=t_comp, t_dram=t_dram, t_noc=t_noc,
+        dram_bytes=dram_bytes, messages=msgs,
+        total_macs=float(sum(l.macs for l in layers)),
+        noc_bytes=float(sum(l.act_in + l.act_out for l in layers)),
+    )

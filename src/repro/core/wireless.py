@@ -1,0 +1,63 @@
+"""The paper's wireless plane: decision function + shared-channel model.
+
+Decision criteria (paper SIII-B2), applied per message:
+
+1. *Multi-chip multicast*: a multicast with >=1 destination off the source
+   chiplet qualifies for wireless (broadcast-natured channel).
+2. *Distance threshold*: a message whose chip-to-chip hop count exceeds the
+   threshold qualifies.
+3. *Injection probability*: a configurable probability gates qualified
+   messages so the (single, shared) wireless channel does not saturate.
+
+The paper uses a Bernoulli filter; for exact reproducibility we use a
+low-discrepancy golden-ratio hash of the message index — the injected
+fraction converges to p without an RNG stream.
+
+Channel model (paper SIII-B3/C2): injected messages are summed per layer and
+served at `wireless_bw` by a single shared channel; wireless time is
+volume / bandwidth, exactly how GEMINI costs NoP/NoC aggregate times.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .traffic import TrafficTrace
+
+_PHI = 0.6180339887498949  # frac(golden ratio)
+
+
+@dataclasses.dataclass(frozen=True)
+class WirelessConfig:
+    bandwidth: float = 64e9 / 8      # B/s (64 Gb/s default; paper: 64/96)
+    distance_threshold: int = 1      # NoP hops (paper sweep: 1..4)
+    injection_prob: float = 0.5      # paper sweep: 0.10..0.80 step 0.05
+    energy_pj_per_bit: float = 1.0   # ~1 pJ/bit mm-wave transceivers
+
+
+def eligibility(trace: TrafficTrace, threshold: int) -> np.ndarray:
+    """Boolean per-message wireless eligibility (criteria 1+2)."""
+    mc = trace.is_multichip & trace.is_multicast & (trace.max_hops >= threshold)
+    far_unicast = (trace.is_multichip & ~trace.is_multicast
+                   & (trace.max_hops > threshold))
+    return mc | far_unicast
+
+
+def injection_filter(n_messages: int, prob: float) -> np.ndarray:
+    """Deterministic low-discrepancy stand-in for the Bernoulli filter."""
+    idx = np.arange(n_messages, dtype=np.float64)
+    return np.modf(idx * _PHI)[0] < prob
+
+
+def select_wireless(trace: TrafficTrace, cfg: WirelessConfig) -> np.ndarray:
+    """Messages designated for the wireless plane under `cfg`."""
+    ok = eligibility(trace, cfg.distance_threshold)
+    return ok & injection_filter(len(ok), cfg.injection_prob)
+
+
+def wireless_energy_joules(trace: TrafficTrace, injected: np.ndarray,
+                           cfg: WirelessConfig) -> float:
+    bits = float(trace.nbytes[injected].sum()) * 8.0
+    return bits * cfg.energy_pj_per_bit * 1e-12

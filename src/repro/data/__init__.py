@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, batch_for_model, stream, synthetic_batch

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel (no Pallas imports)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q, k, v, q_pos, k_pos, *, scale: float,
+                  causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k/v: (B, K, Sk, D) with K | H (GQA)."""
+    B, H, Sq, D = q.shape
+    K = k.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, Sq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    if causal:
+        m = k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            m &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, vf)
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD kernel: the naive O(L) sequential
+recurrence — independent of both the kernel and models/ssm.py's chunked
+formulation, so it cross-checks both."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C):
+    """Sequential state-space recurrence.
+
+    x: (b, L, H, P); dt: (b, L, H); A: (H,); B/C: (b, L, N).
+    state_t = exp(dt_t A) state_{t-1} + dt_t x_t B_t^T
+    y_t     = C_t . state_t
+    Returns (y (b, L, H, P), final state (b, H, P, N)).
+    """
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt * A)                          # (b, H)
+        state = state * dA[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, Bt)
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    init = jnp.zeros((b, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          B.transpose(1, 0, 2).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final.astype(x.dtype)

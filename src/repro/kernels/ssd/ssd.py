@@ -1,0 +1,94 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (DESIGN.md): the chunk axis is the
+innermost, sequential grid dimension; the inter-chunk recurrent state
+(H, P, N) lives in VMEM scratch and is carried across grid steps, so HBM
+traffic per chunk is exactly the chunk's inputs + outputs (the state never
+round-trips).  Within a chunk everything is dense matmul work for the MXU:
+the (Q, Q) decay-gated score product and the (Q, N) x (Q, P) state
+outer-products, with Q = 128 tokens per chunk by default.
+
+Oracle: ref.py; parity asserted over shapes/dtypes in tests/test_kernels.py
+(interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_scr, *,
+            nc: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, H)
+    Bv = b_ref[0].astype(jnp.float32)         # (Q, N)
+    Cv = c_ref[0].astype(jnp.float32)         # (Q, N)
+    A = a_ref[...].astype(jnp.float32)        # (H,)
+
+    Q = x.shape[0]
+    dA = dt * A[None, :]                      # (Q, H)
+    dA_cum = jnp.cumsum(dA, axis=0)           # (Q, H)
+
+    # intra-chunk: decay-gated quadratic attention within the chunk
+    seg = dA_cum[:, None, :] - dA_cum[None, :, :]          # (Q, Q, H)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tri = rows >= cols
+    Lmat = jnp.where(tri[..., None], jnp.exp(seg), 0.0)     # (Q, Q, H)
+    scores = jax.lax.dot_general(Cv, Bv, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    gate = scores[..., None] * Lmat                          # (Q, Q, H)
+    xdt = x * dt[..., None]                                  # (Q, H, P)
+    y_diag = jnp.einsum("qkh,khp->qhp", gate, xdt)
+
+    # inter-chunk: contribution of the carried state
+    state_decay = jnp.exp(dA_cum)                            # (Q, H)
+    st = state_scr[...]                                      # (H, P, N)
+    y_off = jnp.einsum("qn,hpn,qh->qhp", Cv, st, state_decay)
+
+    # state update for the next chunk
+    decay_end = jnp.exp(dA_cum[-1:, :] - dA_cum)             # (Q, H)
+    new_contrib = jnp.einsum("qn,qh,qhp->hpn", Bv, decay_end * dt, x)
+    chunk_decay = jnp.exp(dA_cum[-1, :])                     # (H,)
+    state_scr[...] = st * chunk_decay[:, None, None] + new_contrib
+
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_kernel(x, dt, A, B, C, *, chunk: int = 128,
+               interpret: bool = True) -> jnp.ndarray:
+    """x: (b, L, H, P); dt: (b, L, H) (post-softplus); A: (H,) negative;
+    B/C: (b, L, N).  L must be a multiple of `chunk` (ops.py pads).
+    Returns y: (b, L, H, P)."""
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+    nc = L // chunk
+    grid = (b, nc)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((H,), lambda i, c: (0,)),
+            pl.BlockSpec((1, chunk, H, P), lambda i, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, chunk, H), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, H, P), lambda i, c: (i, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, L, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(A, x, dt, B, C)

@@ -1,0 +1,89 @@
+"""Serving launcher: batched decode with continuous batching.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --requests 16 --slots 4 --max-new 16
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import build_model
+from repro.runtime.parallel import ParallelContext, parallel_context
+from repro.runtime.serve import ServeConfig, make_serve_fns
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=list(ARCHS))
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "pod", "multipod"])
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduced(cfg, vocab_size=min(cfg.vocab_size, 4096))
+    mesh = (make_host_mesh() if args.mesh == "host"
+            else make_production_mesh(multi_pod=args.mesh == "multipod"))
+    scfg = ServeConfig(max_len=args.max_len)
+
+    with jax.set_mesh(mesh), parallel_context(ParallelContext()):
+        model = build_model(cfg, remat=False)
+        params = model.init(jax.random.PRNGKey(0))
+        _, decode_step, init_cache = make_serve_fns(cfg, scfg)
+        dec = jax.jit(decode_step)
+
+        rng = np.random.default_rng(0)
+        queue = [list(rng.integers(1, cfg.vocab_size,
+                                   size=int(rng.integers(2, 6))))
+                 for _ in range(args.requests)]
+        cache = init_cache(args.slots, args.max_len)
+        active = [None] * args.slots
+        results = {}
+        served = 0
+        pos = 0
+        t0 = time.time()
+        steps = 0
+        while (queue or any(active)) and pos < args.max_len - 1:
+            for s in range(args.slots):
+                if active[s] is None and queue:
+                    active[s] = [served, queue.pop(0), []]
+                    served += 1
+            feed = np.zeros((args.slots, 1), np.int32)
+            for s, a in enumerate(active):
+                if a is None:
+                    continue
+                _, prompt, out = a
+                feed[s, 0] = prompt.pop(0) if prompt else out[-1]
+            nxt, _, cache = dec(params, cache, jnp.asarray(feed),
+                                jnp.int32(pos))
+            nxt = np.asarray(nxt)
+            steps += 1
+            for s, a in enumerate(active):
+                if a is None:
+                    continue
+                rid, prompt, out = a
+                if not prompt:
+                    out.append(int(nxt[s, 0]))
+                    if len(out) >= args.max_new:
+                        results[rid] = out
+                        active[s] = None
+            pos += 1
+        dt = time.time() - t0
+        print(f"served {len(results)}/{args.requests} requests, "
+              f"{steps} decode steps x {args.slots} slots in {dt:.1f}s "
+              f"({steps*args.slots/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

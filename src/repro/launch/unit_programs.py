@@ -1,0 +1,203 @@
+"""Single-unit programs for the roofline's scan-body extrapolation.
+
+`cost_analysis()` counts a scan body once (DESIGN.md S7), so per cell we
+also lower the pattern unit alone — same shardings, same remat policy —
+and extrapolate  total = full + sum_i multiplier_i * unit_i.
+
+Multipliers per family:
+- uniform decoder (dense/moe/ssm/vlm): (n_units - 1) x unit
+- hybrid (zamba2): the outer scan body holds an inner scan (counted once)
+  plus the shared block => (n_mamba_layers - 1) x mamba_unit and
+  (n_super_units - 1) x shared_block
+- enc-dec: (n_enc - 1) x enc_unit + (n_dec - 1) x dec_unit
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models import transformer as T
+from repro.models.attention import attention, decode_attention
+from repro.models.layers import mlp, rmsnorm
+from repro.models.ssm import decode_mamba, mamba_block
+from repro.models.moe import moe_block
+
+UnitProgram = Tuple[str, Callable, Tuple, int]  # (name, fn, abstract_args, k)
+
+
+def _abs_slice(tree, axes: int = 1):
+    """Strip `axes` leading stacked dims from an abstract tree."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[axes:], s.dtype), tree)
+
+
+def _x_abs(cfg: ModelConfig, batch: int, seq: int):
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+
+
+def _apply_unit(cfg: ModelConfig, unit_params, x, positions, impl):
+    aux = jnp.zeros((), jnp.float32)
+    for j, spec in enumerate(cfg.unit):
+        x, aux = T._apply_block(unit_params[f"b{j}"], spec, x, cfg,
+                                positions, impl, aux)
+    return x, aux
+
+
+def _train_wrap(fn):
+    """grad-of-checkpointed-unit: matches the full program's remat'd scan
+    body (fwd + replayed fwd + bwd)."""
+    ck = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def loss(params, x, *rest):
+        y, aux = ck(params, x, *rest)
+        return (y.astype(jnp.float32).sum() + aux).astype(jnp.float32)
+
+    return jax.grad(loss, argnums=(0, 1))
+
+
+def _fwd_wrap(fn):
+    def f(params, x, *rest):
+        y, aux = fn(params, x, *rest)
+        return y
+    return f
+
+
+def train_unit_programs(cfg: ModelConfig, abstract_state, batch: int,
+                        seq: int, impl: str,
+                        grad: bool = True) -> List[UnitProgram]:
+    wrap = _train_wrap if grad else _fwd_wrap
+    params = abstract_state["params"]
+    positions = jnp.arange(seq, dtype=jnp.int32)
+    x = _x_abs(cfg, batch, seq)
+    out: List[UnitProgram] = []
+
+    if cfg.is_encdec:
+        enc_u = _abs_slice(params["enc_units"])
+        dec_u = _abs_slice(params["dec_units"])
+
+        def enc_fn(p, xx):
+            h = rmsnorm(p["norm1"], xx, cfg.norm_eps)
+            xx = xx + attention(p["attn"], h, cfg, positions, impl=impl,
+                                causal=False)
+            h = rmsnorm(p["norm2"], xx, cfg.norm_eps)
+            return xx + mlp(p["mlp"], h, cfg.activation), 0.0
+
+        enc_abs = _x_abs(cfg, batch, seq)
+
+        def dec_fn(p, xx, enc):
+            h = rmsnorm(p["norm1"], xx, cfg.norm_eps)
+            xx = xx + attention(p["self_attn"], h, cfg, positions, impl=impl)
+            h = rmsnorm(p["norm_x"], xx, cfg.norm_eps)
+            from repro.models.encdec import _rope_kv_cross
+            ck_, cv = _rope_kv_cross(p["cross_attn"], enc, cfg)
+            xx = xx + attention(p["cross_attn"], h, cfg, positions,
+                                impl=impl, causal=False,
+                                kv_override=(ck_, cv, positions))
+            h = rmsnorm(p["norm2"], xx, cfg.norm_eps)
+            return xx + mlp(p["mlp"], h, cfg.activation), 0.0
+
+        out.append(("enc_unit", wrap(enc_fn), (enc_u, x),
+                    cfg.n_encoder_layers - 1))
+        out.append(("dec_unit", wrap(dec_fn), (dec_u, x, enc_abs),
+                    cfg.n_layers - 1))
+        return out
+
+    if cfg.shared_attn_every:
+        mamba_u = _abs_slice(params["units"], axes=2)
+        shared = params["shared"]
+
+        def mamba_fn(p, xx):
+            h = rmsnorm(p["norm"], xx, cfg.norm_eps)
+            return xx + mamba_block(p["mamba"], h, cfg, impl=impl), 0.0
+
+        def shared_fn(p, xx):
+            h = rmsnorm(p["norm1"], xx, cfg.norm_eps)
+            xx = xx + attention(p["attn"], h, cfg, positions, impl=impl)
+            h = rmsnorm(p["norm2"], xx, cfg.norm_eps)
+            return xx + mlp(p["mlp"], h, cfg.activation), 0.0
+
+        n_super = cfg.n_layers // cfg.shared_attn_every
+        out.append(("mamba_unit", wrap(mamba_fn), (mamba_u, x),
+                    cfg.n_layers - 1))
+        out.append(("shared_unit", wrap(shared_fn), (shared, x),
+                    n_super - 1))
+        return out
+
+    unit = _abs_slice(params["units"])
+
+    def unit_fn(p, xx):
+        return _apply_unit(cfg, p, xx, positions, impl)
+
+    out.append(("unit", wrap(unit_fn), (unit, x), cfg.n_units - 1))
+    return out
+
+
+def decode_unit_programs(cfg: ModelConfig, abstract_params, abstract_cache,
+                         batch: int) -> List[UnitProgram]:
+    params = abstract_params
+    x = _x_abs(cfg, batch, 1)
+    pos = jnp.int32(7)
+    out: List[UnitProgram] = []
+
+    if cfg.is_encdec:
+        dec_u = _abs_slice(params["dec_units"])
+        self_c = _abs_slice(abstract_cache["self"])
+        cross_c = _abs_slice(abstract_cache["cross"])
+
+        def dec_fn(p, sc, cc, xx):
+            h = rmsnorm(p["norm1"], xx, cfg.norm_eps)
+            y, sc = decode_attention(p["self_attn"], h, sc, cfg, pos)
+            xx = xx + y
+            h = rmsnorm(p["norm_x"], xx, cfg.norm_eps)
+            y, _ = decode_attention(p["cross_attn"], h, cc, cfg, pos,
+                                    cross=True)
+            xx = xx + y
+            h = rmsnorm(p["norm2"], xx, cfg.norm_eps)
+            return xx + mlp(p["mlp"], h, cfg.activation), sc
+
+        out.append(("dec_unit", dec_fn, (dec_u, self_c, cross_c, x),
+                    cfg.n_layers - 1))
+        return out
+
+    if cfg.shared_attn_every:
+        mamba_u = _abs_slice(params["units"], axes=2)
+        mamba_c = _abs_slice(abstract_cache["units"], axes=2)
+        shared_c = _abs_slice(abstract_cache["shared"])
+
+        def mamba_fn(p, c, xx):
+            h = rmsnorm(p["norm"], xx, cfg.norm_eps)
+            y, c = decode_mamba(p["mamba"], h, c, cfg)
+            return xx + y, c
+
+        def shared_fn(p, c, xx):
+            h = rmsnorm(p["norm1"], xx, cfg.norm_eps)
+            y, c = decode_attention(p["attn"], h, c, cfg, pos)
+            xx = xx + y
+            h = rmsnorm(p["norm2"], xx, cfg.norm_eps)
+            return xx + mlp(p["mlp"], h, cfg.activation), c
+
+        n_super = cfg.n_layers // cfg.shared_attn_every
+        out.append(("mamba_unit", mamba_fn, (mamba_u, mamba_c, x),
+                    cfg.n_layers - 1))
+        out.append(("shared_unit", shared_fn,
+                    (params["shared"], shared_c, x), n_super - 1))
+        return out
+
+    unit = _abs_slice(params["units"])
+    cache_u = _abs_slice(abstract_cache["units"])
+
+    def unit_fn(p, c, xx):
+        new_c = {}
+        for j, spec in enumerate(cfg.unit):
+            cb = c.get(f"b{j}")
+            xx, cb = T._decode_block(p[f"b{j}"], spec, cb, xx, cfg, pos)
+            if f"b{j}" in c:
+                new_c[f"b{j}"] = cb
+        return xx, new_c
+
+    out.append(("unit", unit_fn, (unit, cache_u, x), cfg.n_units - 1))
+    return out

@@ -1,0 +1,205 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-scan formulation.
+
+Follows the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence is
+split into chunks of Q tokens; within a chunk the recurrence is evaluated
+as a (masked) quadratic attention-like product, across chunks a linear
+recurrence carries the (H, P, N) state.  This is exactly the structure the
+Pallas kernel in repro.kernels/ssd tiles for VMEM; this module is the
+lowerable-everywhere jnp implementation (and the kernel's oracle lives in
+kernels/ssd/ref.py, mirroring this math).
+
+Single B/C group (n_groups=1), which matches the assigned configs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import _dense_init, rmsnorm, rmsnorm_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    d, dssm, H, N = cfg.d_model, cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_state
+    conv_dim = dssm + 2 * N
+    k1, k2, k3 = jax.random.split(key, 3)
+    # in_proj emits [z, x, B, C, dt]
+    return {
+        "in_proj": _dense_init(k1, (d, 2 * dssm + 2 * N + H)),
+        "conv_w": _dense_init(k2, (cfg.d_conv, conv_dim), 0),
+        "conv_b": jnp.zeros((conv_dim,), jnp.bfloat16),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": rmsnorm_init(dssm),
+        "out_proj": _dense_init(k3, (dssm, d)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    dssm, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z, xBC, dt = jnp.split(zxbcdt, [dssm, 2 * dssm + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv1d. xBC: (B, L, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xBC.dtype)
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} x[..., k]."""
+    T = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    seg = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, chunk: int,
+             init_state: jnp.ndarray | None = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD chunked scan.
+
+    x: (b, L, H, P); dt: (b, L, H) (post-softplus); A: (H,) negative;
+    B, C: (b, L, N) single group.  Returns (y (b,L,H,P), state (b,H,P,N)).
+    """
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    xc = x.reshape(b, nc, Q, H, P)
+    dtc = dt.reshape(b, nc, Q, H)
+    Bc = B.reshape(b, nc, Q, N)
+    Cc = C.reshape(b, nc, Q, N)
+    dA = dtc * A  # (b, nc, Q, H)
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (quadratic within the chunk)
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))       # (b,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)          # (b,nc,Q,Q)
+    gate = (scores[:, :, None] * Lmat).astype(x.dtype)      # (b,nc,H,Q,Q)
+    xdt = (xc.astype(jnp.float32) * dtc[..., None]).astype(x.dtype)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", gate, xdt)
+
+    # chunk states
+    decay_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)      # (b,nc,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc,
+                        decay_end.astype(x.dtype) * dtc.astype(x.dtype), xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])              # (b,nc,H)
+
+    def body(carry, xs):
+        st_c, dec = xs
+        new = carry * dec[:, :, None, None].astype(carry.dtype) + st_c
+        return new, carry  # emit state BEFORE this chunk
+
+    init = (jnp.zeros((b, H, P, N), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        body, init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (b,nc,H,P,N)
+
+    # inter-chunk output
+    state_decay = jnp.exp(dA_cum)                            # (b,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc,
+                       prev_states.astype(x.dtype),
+                       state_decay.astype(x.dtype))
+    y = (y_diag + y_off).reshape(b, L, H, P)
+    return y, final.astype(x.dtype)
+
+
+def mamba_block(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                impl: str = "auto") -> jnp.ndarray:
+    """Full-sequence Mamba2 block. x: (B, L, d) -> (B, L, d)."""
+    B_, L, _ = x.shape
+    dssm, N, H, P = (cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads,
+                     cfg.ssm_head_dim)
+    z, xBC, dt = _split_proj(cfg, jnp.einsum("bld,de->ble", x,
+                                             params["in_proj"]))
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs, Bv, Cv = jnp.split(xBC, [dssm, dssm + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B_, L, H, P)
+    if impl == "pallas":
+        from repro.kernels.ssd.ops import ssd
+        y, _ = ssd(xh, dt, A, Bv, Cv, chunk=cfg.ssm_chunk)
+    else:
+        # pad L to a chunk multiple for the scan
+        Q = min(cfg.ssm_chunk, max(16, L))
+        pad = (-L) % Q
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bv = jnp.pad(Bv, ((0, 0), (0, pad), (0, 0)))
+            Cv = jnp.pad(Cv, ((0, 0), (0, pad), (0, 0)))
+        y, _ = ssd_scan(xh, dt, A, Bv, Cv, Q)
+        y = y[:, :L]
+    y = y + params["D"].astype(y.dtype)[:, None] * xs.reshape(B_, L, H, P)
+    y = y.reshape(B_, L, dssm)
+    y = rmsnorm(params["gate_norm"],
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, params["out_proj"])
+
+
+# --------------------------------------------------------------------------
+# decode: O(1) recurrent state per block
+# --------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_dim), jnp.bfloat16),
+        "state": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.bfloat16),
+    }
+
+
+def decode_mamba(params: Params, x: jnp.ndarray, cache: Dict,
+                 cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token step. x: (B, 1, d)."""
+    B_ = x.shape[0]
+    dssm, N, H, P = (cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads,
+                     cfg.ssm_head_dim)
+    z, xBC, dt = _split_proj(cfg, jnp.einsum("bld,de->ble", x,
+                                             params["in_proj"]))
+    xBC = xBC[:, 0]
+    window = jnp.concatenate([cache["conv"], xBC[:, None]], axis=1)
+    conv = (window * params["conv_w"]).sum(axis=1) + params["conv_b"]
+    xBC = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    new_conv = window[:, 1:]
+    xs, Bv, Cv = jnp.split(xBC, [dssm, dssm + N], axis=-1)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dtv * A)                                    # (B, H)
+    xh = xs.reshape(B_, H, P)
+    st = cache["state"].astype(jnp.float32)
+    st = st * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, xh.astype(jnp.float32),
+        Bv.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", st, Cv.astype(jnp.float32))
+    y = y + params["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, 1, dssm).astype(x.dtype)
+    y = rmsnorm(params["gate_norm"],
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    return out, {"conv": new_conv.astype(jnp.bfloat16),
+                 "state": st.astype(jnp.bfloat16)}

@@ -1,0 +1,2 @@
+from .optimizers import (OptimizerConfig, adafactor, adamw, build_optimizer,
+                         clip_by_global_norm, cosine_lr)

@@ -1,0 +1,155 @@
+"""Optimizers: AdamW and Adafactor (factored second moment), plus global
+gradient-norm clipping and a cosine LR schedule.
+
+Hand-rolled (no optax dependency in this environment).  Both optimizers
+keep their state in the same tree structure as the params, so optimizer
+state inherits the parameter shardings (ZeRO-style: FSDP-sharded params =>
+FSDP-sharded optimizer state for free).
+
+Adafactor matters for the 1T-parameter kimi-k2 cell: its state is O(rows +
+cols) per matrix instead of O(rows x cols), which is the difference
+between fitting and not fitting a pod (DESIGN.md S6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"             # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    clip_norm: float = 1.0
+    # adafactor
+    decay_offset: float = 1e-30
+    min_dim_factored: int = 128     # factor only matrices at least this big
+
+
+def cosine_lr(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    # (step + 1): the first step must not see lr == 0
+    warm = jnp.minimum((step + 1.0) / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+def adamw(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        lr = cosine_lr(cfg, step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = cfg.b1 * mu + (1 - cfg.b1) * g
+            nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+            upd = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+            if p.ndim >= 2:
+                upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), mu, nu
+
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        gl = treedef.flatten_up_to(grads)
+        mul = treedef.flatten_up_to(state["mu"])
+        nul = treedef.flatten_up_to(state["nu"])
+        out = [upd(g, m, n, p) for g, m, n, p in zip(gl, mul, nul, leaves)]
+        return (treedef.unflatten([o[0] for o in out]),
+                {"mu": treedef.unflatten([o[1] for o in out]),
+                 "nu": treedef.unflatten([o[2] for o in out])})
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moment, momentum-free)
+# --------------------------------------------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 128 and p.shape[-2] >= 128
+
+
+def adafactor(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"v": jax.tree.map(st, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        lr = cosine_lr(cfg, step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** -0.8
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + cfg.decay_offset
+            if _factored(p):
+                vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], 1e-30))
+                upd = g * jax.lax.rsqrt(denom + 1e-30)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta2 * v["v"] + (1 - beta2) * g2}
+                upd = g * jax.lax.rsqrt(nv["v"] + 1e-30)
+            # update clipping (Adafactor's RMS rule)
+            rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:
+                upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), nv
+
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        gl = treedef.flatten_up_to(grads)
+        vl = treedef.flatten_up_to(state["v"])
+        out = [upd(g, v, p) for g, v, p in zip(gl, vl, leaves)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_v = treedef.unflatten([o[1] for o in out])
+        return new_p, {"v": new_v}
+
+    return Optimizer(init, update)
+
+
+def build_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor}[cfg.name](cfg)

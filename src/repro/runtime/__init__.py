@@ -1,0 +1,8 @@
+from .sharding import (batch_spec, cache_shardings, cache_spec,
+                       logical_batch_shardings, param_spec, params_shardings)
+from .train import TrainConfig, make_train_step, make_loss_fn, cross_entropy
+from .serve import ServeConfig, make_serve_fns, generate
+from .compression import (CompressionConfig, compress_decompress,
+                          compress_with_error_feedback, init_residual)
+from .fault_tolerance import (ElasticPlan, Heartbeat, StragglerMitigator,
+                              run_with_recovery)

@@ -1,0 +1,135 @@
+"""Fault tolerance & elasticity machinery for 1000+-node operation.
+
+Components (all host-side; the device program stays a pure jit step):
+
+- `Heartbeat` — worker liveness registry with configurable timeout; the
+  coordinator marks silent workers dead and triggers the restart policy.
+- `ElasticPlan` — given the live worker set, picks the largest usable mesh
+  (power-of-two slices along the data/pod axes; the model axis is never
+  shrunk because TP state cannot be re-sharded without weight movement the
+  plan can't hide) and the checkpoint-restore shardings for it.
+- `StragglerMitigator` — EWMA per-step timing; a worker consistently
+  slower than `threshold` x median is flagged for eviction (on TPU pods
+  the usual cause is a flaky host or a thermally-throttled chip; evicting
+  and shrinking the DP axis beats running the whole pod at straggler
+  speed).  Mitigation = treat as failure => elastic reshard.
+- `run_with_recovery` — the driver loop: step, checkpoint every K, on
+  failure restore latest checkpoint on the surviving mesh and continue
+  (exactly reproducible because the data pipeline is step-indexed).
+
+The simulated-failure integration test (tests/test_fault_tolerance.py)
+kills a "worker" mid-run and asserts bit-exact continuation against an
+uninterrupted run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    timeout_s: float = 30.0
+    last_seen: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def beat(self, worker: int, now: Optional[float] = None) -> None:
+        self.last_seen[worker] = time.monotonic() if now is None else now
+
+    def dead(self, now: Optional[float] = None) -> List[int]:
+        t = time.monotonic() if now is None else now
+        return sorted(w for w, s in self.last_seen.items()
+                      if t - s > self.timeout_s)
+
+    def alive(self, now: Optional[float] = None) -> List[int]:
+        t = time.monotonic() if now is None else now
+        return sorted(w for w, s in self.last_seen.items()
+                      if t - s <= self.timeout_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    n_workers: int
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+
+    @staticmethod
+    def plan(n_alive_chips: int, model_parallel: int,
+             pods: int = 1) -> "ElasticPlan":
+        """Largest power-of-two data axis that fits the survivors; the
+        model axis is preserved (TP weights are not re-shardable in-run)."""
+        if n_alive_chips < model_parallel:
+            raise RuntimeError(
+                f"cannot keep model_parallel={model_parallel} with only "
+                f"{n_alive_chips} chips")
+        data = 1
+        while data * 2 * model_parallel * pods <= n_alive_chips:
+            data *= 2
+        if pods > 1:
+            return ElasticPlan(pods * data * model_parallel,
+                               (pods, data, model_parallel),
+                               ("pod", "data", "model"))
+        return ElasticPlan(data * model_parallel, (data, model_parallel),
+                           ("data", "model"))
+
+
+@dataclasses.dataclass
+class StragglerMitigator:
+    threshold: float = 1.5     # x median EWMA step time
+    alpha: float = 0.3
+    min_steps: int = 5
+    ewma: Dict[int, float] = dataclasses.field(default_factory=dict)
+    counts: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def record(self, worker: int, step_time: float) -> None:
+        prev = self.ewma.get(worker, step_time)
+        self.ewma[worker] = (1 - self.alpha) * prev + self.alpha * step_time
+        self.counts[worker] = self.counts.get(worker, 0) + 1
+
+    def stragglers(self) -> List[int]:
+        ready = {w: t for w, t in self.ewma.items()
+                 if self.counts[w] >= self.min_steps}
+        if len(ready) < 3:
+            return []
+        med = float(np.median(list(ready.values())))
+        return sorted(w for w, t in ready.items()
+                      if t > self.threshold * med)
+
+
+@dataclasses.dataclass
+class RecoveryEvent:
+    step: int
+    kind: str          # "failure" | "straggler"
+    workers: List[int]
+    new_mesh: Tuple[int, ...]
+
+
+def run_with_recovery(step_fn: Callable, state, n_steps: int,
+                      batch_fn: Callable[[int], dict],
+                      save_fn: Callable[[dict, int], None],
+                      restore_fn: Callable[[], Tuple[dict, int]],
+                      checkpoint_every: int = 10,
+                      failure_injector: Optional[Callable[[int], bool]] = None
+                      ) -> Tuple[dict, List[RecoveryEvent], list]:
+    """Driver loop with checkpoint/restart.  `failure_injector(step)` lets
+    tests kill the run deterministically; production wires it to the
+    heartbeat registry."""
+    events: List[RecoveryEvent] = []
+    metrics_log = []
+    step = 0
+    while step < n_steps:
+        try:
+            if failure_injector is not None and failure_injector(step):
+                raise RuntimeError(f"injected worker failure at step {step}")
+            state, metrics = step_fn(state, batch_fn(step))
+            metrics_log.append(metrics)
+            step += 1
+            if step % checkpoint_every == 0:
+                save_fn(state, step)
+        except RuntimeError:
+            state, step = restore_fn()
+            events.append(RecoveryEvent(step, "failure", [], ()))
+    return state, events, metrics_log

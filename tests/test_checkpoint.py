@@ -1,0 +1,82 @@
+"""Checkpointer: roundtrip, async, integrity, garbage collection,
+elastic restore under different shardings."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_steps,
+                                           restore, save)
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"params": {"w": jax.random.normal(k, (32, 16)),
+                       "units": {"b0": jnp.arange(12.0).reshape(3, 4)}},
+            "step": jnp.int32(5)}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), t, 5)
+    out = restore(str(tmp_path), t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_steps_and_gc(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        ck.save_async(t, s)
+        ck.wait()
+    assert latest_steps(str(tmp_path)) == [3, 4]
+
+
+def test_async_overlaps_and_is_complete(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path))
+    t = _tree()
+    ck.save_async(t, 7)
+    ck.wait()
+    out = restore(str(tmp_path), t, step=7)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+
+
+def test_corruption_detected(tmp_path):
+    t = _tree()
+    d = save(str(tmp_path), t, 3)
+    shard = [f for f in os.listdir(d) if f.startswith("shard_")][0]
+    with open(os.path.join(d, shard), "r+b") as f:
+        f.seek(100)
+        f.write(b"\x42\x42\x42")
+    with pytest.raises(IOError):
+        restore(str(tmp_path), t)
+
+
+def test_elastic_restore_new_shardings(tmp_path):
+    """Checkpoint written once, restored under a different mesh's
+    shardings (elastic restart)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    t = _tree()
+    save(str(tmp_path), t, 1)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+    out = restore(str(tmp_path), t, shardings=sh)
+    assert out["params"]["w"].sharding == NamedSharding(mesh, P())
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+
+
+def test_atomic_no_partial_checkpoint(tmp_path):
+    """Temp dirs never surface as checkpoints."""
+    t = _tree()
+    save(str(tmp_path), t, 9)
+    assert all(not d.startswith(".tmp") for d in os.listdir(tmp_path)
+               if os.path.isdir(os.path.join(tmp_path, d))
+               and d.startswith("step_"))
+    assert latest_steps(str(tmp_path)) == [9]

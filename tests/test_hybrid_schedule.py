@@ -1,0 +1,72 @@
+"""The LM-scale hybrid plane scheduler: paper decision function, overlay
+saturation, balancer optimality (mirrors the package-scale properties)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hybrid_schedule import (PlaneConfig, balance_cell,
+                                        flows_from_coll_per_op,
+                                        schedule_cell, sweep_cell,
+                                        wired_time, eligible_volume)
+
+
+COLL = {"all-gather": 4e9, "all-reduce": 8e9, "reduce-scatter": 2e9,
+        "all-to-all": 3e9}
+
+
+def test_multicast_classification():
+    flows = flows_from_coll_per_op(COLL)
+    mc = {f.op: f.multicast for f in flows}
+    assert mc["all-gather"] and mc["all-to-all"]
+    assert not mc["all-reduce"] and not mc["reduce-scatter"]
+
+
+def test_offload_reduces_collective_time():
+    s = schedule_cell(COLL, t_compute=1e-3, t_memory=1e-3,
+                      pcfg=PlaneConfig(injection_prob=0.5))
+    assert s.t_coll_hybrid < s.t_coll_wired
+    assert s.coll_speedup > 1.0
+
+
+def test_overlay_saturates_at_high_injection():
+    """Mirror of paper Fig. 5: past some injection rate the overlay is the
+    new bottleneck and more injection stops helping."""
+    times = []
+    for p in (0.1, 0.4, 1.0):
+        s = schedule_cell(COLL, 0.0, 0.0,
+                          PlaneConfig(overlay_bw=60e9, injection_prob=p))
+        times.append(s.t_coll_hybrid)
+    assert times[1] < times[0]            # more helps at first
+    assert times[-1] > times[-2]          # then the overlay saturates
+
+
+def test_no_speedup_when_compute_bound():
+    s = schedule_cell(COLL, t_compute=10.0, t_memory=0.0,
+                      pcfg=PlaneConfig(injection_prob=0.5))
+    assert s.step_speedup == pytest.approx(1.0)
+
+
+@given(st.floats(1e6, 1e11), st.floats(1e6, 1e11), st.floats(1e6, 1e11))
+@settings(max_examples=30, deadline=None)
+def test_balancer_dominates_sweep(ag, ar, a2a):
+    coll = {"all-gather": ag, "all-reduce": ar, "all-to-all": a2a}
+    swept, _ = sweep_cell(coll, 1e-4, 1e-4)
+    bal = balance_cell(coll, 1e-4, 1e-4)
+    assert bal.step_speedup >= swept.step_speedup - 1e-9
+
+
+@given(st.floats(1e6, 1e12))
+@settings(max_examples=30, deadline=None)
+def test_balancer_never_degrades(vol):
+    coll = {"all-gather": vol}
+    bal = balance_cell(coll, 0.0, 0.0)
+    assert bal.step_speedup >= 1.0 - 1e-12
+
+
+def test_threshold_filters_eligibility():
+    flows = flows_from_coll_per_op(COLL, ring_radius=4)
+    v_lo = eligible_volume(flows, PlaneConfig(distance_threshold=1,
+                                              ring_radius=4))
+    v_hi = eligible_volume(flows, PlaneConfig(distance_threshold=8,
+                                              ring_radius=4))
+    assert v_lo > v_hi  # radius-4 flows drop out above the threshold

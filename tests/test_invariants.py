@@ -1,0 +1,157 @@
+"""Property tests on deeper system invariants (hypothesis where useful):
+RoPE norm preservation, segsum correctness, decode ring-buffer
+wraparound, topology routing, workload graph consistency, traffic
+conservation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, reduced
+from repro.core.topology import build_topology, nearest_dram
+from repro.core.traffic import build_trace
+from repro.core.mapper import pipeline_mapping
+from repro.core.workloads import WORKLOADS, get_workload
+from repro.models import build_model
+from repro.models.layers import apply_rope, rope_frequencies
+from repro.models.ssm import _segsum
+
+
+# --------------------------------------------------------------------------
+# model-layer properties
+# --------------------------------------------------------------------------
+
+@given(st.integers(2, 32), st.sampled_from([32, 64, 128]),
+       st.floats(0.25, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_rope_preserves_norm(seq, dim, frac):
+    """Rotations preserve per-head vector norms."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, seq, 2, dim))
+    pos = jnp.arange(seq, dtype=jnp.int32)
+    cos, sin = rope_frequencies(dim, frac, 1e4, pos)
+    y = apply_rope(x, cos, sin, frac)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n (the RoPE property)."""
+    dim = 64
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, dim))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, dim))
+
+    def score(m, n):
+        cm, sm = rope_frequencies(dim, 1.0, 1e4,
+                                  jnp.array([m], jnp.int32))
+        cn, sn = rope_frequencies(dim, 1.0, 1e4,
+                                  jnp.array([n], jnp.int32))
+        qm = apply_rope(q, cm, sm)
+        kn = apply_rope(k, cn, sn)
+        return float(jnp.sum(qm * kn))
+
+    assert score(3, 1) == pytest.approx(score(10, 8), rel=1e-4)
+    assert score(5, 5) == pytest.approx(score(0, 0), rel=1e-4)
+
+
+def test_segsum_matches_naive():
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8))
+    out = np.asarray(_segsum(x))
+    xn = np.asarray(x)
+    for i in range(8):
+        for j in range(8):
+            if j > i:
+                assert out[0, i, j] == -np.inf
+            else:
+                assert out[0, i, j] == pytest.approx(
+                    xn[0, j + 1:i + 1].sum(), abs=1e-5)
+
+
+def test_decode_ring_buffer_wraparound():
+    """SWA decode past the window: ring buffer must keep only the last
+    `window` tokens and still match a fresh full forward."""
+    import dataclasses
+    base = reduced(ARCHS["mixtral-8x22b"])
+    cfg = dataclasses.replace(base, sliding_window=8, unit=())
+    model = build_model(cfg, impl="naive", remat=False)
+    params = model.init(jax.random.PRNGKey(4))
+    S = 20   # > 2x window: the ring wraps more than once
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (1, S)), jnp.int32)
+    full, _ = model.apply(params, {"tokens": toks})
+    cache = model.init_cache(1, S + 1)
+    dec = jax.jit(model.decode)
+    for t in range(S):
+        lg, cache = dec(params, cache, toks[:, t:t + 1], jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full[:, -1]), atol=0.2)
+
+
+# --------------------------------------------------------------------------
+# package-scale sim invariants
+# --------------------------------------------------------------------------
+
+def test_topology_routes_are_connected_and_minimal():
+    topo = build_topology()
+    for a in range(topo.n_nodes):
+        for b in range(topo.config.n_chiplets):
+            if a == b:
+                continue
+            route = topo.route(a, b)
+            if not route:
+                continue
+            # connected: each link starts where the previous ended
+            for l1, l2 in zip(route, route[1:]):
+                assert l1[1] == l2[0]
+            # each hop is unit manhattan distance
+            for (x1, y1), (x2, y2) in route:
+                assert abs(x1 - x2) + abs(y1 - y2) == 1
+
+
+def test_nearest_dram_is_nearest():
+    topo = build_topology()
+    n_chip = topo.config.n_chiplets
+    for c in range(n_chip):
+        best = nearest_dram(topo, c)
+        d_best = topo.nop_hops(c, best)
+        for d in range(n_chip, topo.n_nodes):
+            assert d_best <= topo.nop_hops(c, d)
+
+
+@pytest.mark.parametrize("wl", ["resnet50", "densenet", "transformer"])
+def test_workload_graph_consistency(wl):
+    layers = get_workload(wl)
+    for i, l in enumerate(layers):
+        for c in l.consumers:
+            assert i < c < len(layers), (wl, i, c)
+        assert l.macs >= 0 and l.act_out >= 0
+
+
+def test_all_workloads_have_positive_work():
+    for wl in WORKLOADS:
+        layers = get_workload(wl)
+        assert sum(l.macs for l in layers) > 0, wl
+
+
+@given(st.sampled_from(["resnet50", "googlenet", "zfnet"]))
+@settings(max_examples=6, deadline=None)
+def test_traffic_bytes_conservation(wl):
+    """Every packet's bytes appear exactly once per link it traverses; the
+    per-layer link loads equal the scatter of packet bytes."""
+    topo = build_topology()
+    layers = get_workload(wl)
+    tr = build_trace(layers, pipeline_mapping(layers, topo), topo)
+    loads = tr.baseline_link_loads()
+    assert loads.sum() == pytest.approx(
+        float(tr.nbytes[tr.inc_msg].sum()), rel=1e-9)
+    assert (loads >= -1e-9).all()
+
+
+def test_message_volume_matches_packet_volume():
+    topo = build_topology()
+    layers = get_workload("googlenet")
+    tr = build_trace(layers, pipeline_mapping(layers, topo), topo)
+    msg_vol = sum(m.nbytes for m in tr.messages)
+    assert float(tr.nbytes.sum()) == pytest.approx(msg_vol, rel=1e-9)

@@ -1,0 +1,189 @@
+"""Runtime substrate tests: optimizers, compression, data pipeline,
+sharding rules — including hypothesis property tests on the invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.optim.optimizers import (OptimizerConfig, build_optimizer,
+                                    clip_by_global_norm, cosine_lr)
+from repro.runtime.compression import (CompressionConfig,
+                                       compress_decompress,
+                                       compress_with_error_feedback,
+                                       init_residual)
+from repro.runtime.sharding import batch_spec, cache_spec, param_spec
+
+
+# --------------------------------------------------------------------------
+# optimizers
+# --------------------------------------------------------------------------
+
+def _toy_params():
+    k = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(k, (256, 256)),
+            "b": jnp.zeros((256,)),
+            "nested": {"u": jax.random.normal(k, (128, 512))}}
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_reduces_quadratic(name):
+    cfg = OptimizerConfig(name=name, lr=0.05, warmup_steps=0,
+                          total_steps=200, weight_decay=0.0)
+    opt = build_optimizer(cfg)
+    params = _toy_params()
+    target = jax.tree.map(lambda p: jnp.ones_like(p) * 0.5, params)
+    state = opt.init(params)
+
+    def loss(p):
+        return sum(jnp.sum((a - b) ** 2) for a, b in
+                   zip(jax.tree.leaves(p), jax.tree.leaves(target)))
+
+    l0 = float(loss(params))
+    step = jnp.zeros((), jnp.int32)
+    for i in range(60):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params, step + i)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_adafactor_state_is_factored():
+    cfg = OptimizerConfig(name="adafactor")
+    opt = build_optimizer(cfg)
+    st_ = opt.init({"w": jnp.zeros((256, 512)), "b": jnp.zeros((64,))})
+    assert set(st_["v"]["w"]) == {"vr", "vc"}
+    assert st_["v"]["w"]["vr"].shape == (256,)
+    assert st_["v"]["w"]["vc"].shape == (512,)
+    assert set(st_["v"]["b"]) == {"v"}        # small: unfactored
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    total = jnp.sqrt(jnp.sum(clipped["a"] ** 2))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+    assert float(norm) == pytest.approx(np.sqrt(10) * 100, rel=1e-5)
+
+
+def test_cosine_lr_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(cosine_lr(cfg, jnp.int32(0))) == pytest.approx(0.1)
+    assert float(cosine_lr(cfg, jnp.int32(0))) > 0.0  # first step trains
+    assert float(cosine_lr(cfg, jnp.int32(9))) == pytest.approx(1.0)
+    assert float(cosine_lr(cfg, jnp.int32(100))) == pytest.approx(0.0,
+                                                                  abs=1e-6)
+
+
+# --------------------------------------------------------------------------
+# gradient compression
+# --------------------------------------------------------------------------
+
+@given(st.integers(1, 5), st.floats(0.1, 100.0))
+@settings(max_examples=20, deadline=None)
+def test_compression_error_bounded(seed, scale):
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.standard_normal((512,)) * scale,
+                          jnp.float32)}
+    out = compress_decompress(g, CompressionConfig(block=128))
+    err = np.abs(np.asarray(out["w"]) - np.asarray(g["w"]))
+    # int8 block quantisation: error <= blockmax/127 per element
+    bm = np.abs(np.asarray(g["w"]).reshape(-1, 128)).max(1, keepdims=True)
+    assert (err.reshape(-1, 128) <= bm / 127 + 1e-6).all()
+
+
+def test_error_feedback_reduces_bias():
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal((1024,)), jnp.float32)
+    grads = {"w": g_true}
+    cfg = CompressionConfig(block=256)
+    res = init_residual(grads)
+    acc_ef = np.zeros(1024)
+    acc_nf = np.zeros(1024)
+    for _ in range(50):
+        out, res = compress_with_error_feedback(grads, res, cfg)
+        acc_ef += np.asarray(out["w"])
+        acc_nf += np.asarray(compress_decompress(grads, cfg)["w"])
+    true_sum = np.asarray(g_true) * 50
+    assert np.abs(acc_ef - true_sum).mean() <= \
+        np.abs(acc_nf - true_sum).mean() + 1e-6
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+def test_data_deterministic_and_step_indexed():
+    cfg = DataConfig(seed=7, seq_len=32, global_batch=4, vocab_size=1000)
+    b1 = synthetic_batch(cfg, 13)
+    b2 = synthetic_batch(cfg, 13)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = synthetic_batch(cfg, 14)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next-token shifted
+    assert b1["tokens"].shape == b1["labels"].shape == (4, 32)
+    assert (b1["tokens"] < 1000).all() and (b1["tokens"] >= 0).all()
+
+
+# --------------------------------------------------------------------------
+# sharding rules: hypothesis property tests
+# --------------------------------------------------------------------------
+
+def _mesh():
+    return jax.make_mesh(
+        (1, len(jax.devices())), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@given(st.sampled_from(["wq", "wk", "wv", "wo", "w_up", "w_down", "table",
+                        "unembed", "router", "in_proj", "out_proj",
+                        "scale", "conv_w"]),
+       st.integers(1, 4),
+       st.sampled_from([64, 96, 128, 15, 384, 1000]))
+@settings(max_examples=60, deadline=None)
+def test_param_spec_always_divisible(name, rank, dim):
+    """INVARIANT: whatever axis the rule assigns, the dimension size is
+    divisible by the mesh axis size (no silent GSPMD padding)."""
+    mesh = _mesh()
+    shape = tuple([dim] * rank)
+    spec = param_spec(mesh, f"units/b0/attn/{name}", shape)
+    assert len(spec) <= rank
+    for d, ax in zip(shape, tuple(spec) + (None,) * (rank - len(spec))):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        assert d % size == 0, (name, shape, spec)
+
+
+@given(st.integers(1, 512), st.integers(1, 8192))
+@settings(max_examples=40, deadline=None)
+def test_batch_spec_divisible(batch, seq):
+    mesh = _mesh()
+    spec = batch_spec(mesh, (batch, seq))
+    for d, ax in zip((batch, seq),
+                     tuple(spec) + (None,) * (2 - len(spec))):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        assert d % size == 0
+
+
+@given(st.tuples(st.integers(1, 64), st.integers(1, 64),
+                 st.integers(128, 4096), st.integers(1, 64),
+                 st.integers(32, 256)))
+@settings(max_examples=40, deadline=None)
+def test_cache_spec_divisible(shape):
+    mesh = _mesh()
+    spec = cache_spec(mesh, shape)
+    padded = tuple(spec) + (None,) * (len(shape) - len(spec))
+    for d, ax in zip(shape, padded):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        assert d % size == 0
