@@ -4,7 +4,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (WirelessConfig, balance, make_trace, simulate_hybrid,
+from repro.core import (WirelessConfig, balance, make_trace,
+                        network_summary, network_sweep_all, simulate_hybrid,
                         simulate_wired, sweep_all, summary)
 from repro.core.dse import INJECTIONS, THRESHOLDS, sweep
 from repro.core.workloads import WORKLOADS
@@ -51,6 +52,30 @@ def fig5_heatmap(workload: str = "zfnet", bandwidth_gbps: int = 96,
         grid[thr] = row
     return {"workload": workload, "bandwidth_gbps": bandwidth_gbps,
             "injections": list(INJECTIONS), "grid": grid}
+
+
+def fig4_mac_channels(traces=None) -> dict:
+    """Beyond Fig. 4: how much of the idealized speedup survives a real
+    MAC / a multi-channel plan.  Per workload and per (MAC protocol,
+    channel plan): best speedup over the (threshold x injection x
+    bandwidth) grid, via the batched engine."""
+    traces = traces or _traces()
+    results = network_sweep_all(traces)
+    out = {}
+    for r in results:
+        table = r.best_by_network()
+        ideal = table[("ideal", "1ch")]
+        out[r.workload] = {
+            f"{mac}/{plan}": {"best_speedup": sp,
+                              "vs_ideal": sp - ideal}
+            for (mac, plan), sp in table.items()}
+        out[r.workload]["_best"] = {
+            "config": r.best_config.describe(),
+            "speedup": r.best_speedup}
+    out["_summary"] = {f"{mac}/{plan}": {"mean": m, "max": mx}
+                       for (mac, plan), (m, mx)
+                       in network_summary(results).items()}
+    return out
 
 
 def balancer_vs_sweep(traces=None) -> dict:

@@ -41,6 +41,12 @@ def main() -> None:
          lambda r: "peak=%.1f%%;worst=%.1f%%" % (
              max(max(v) for v in r["grid"].values()),
              min(min(v) for v in r["grid"].values()))),
+        ("fig4_mac_channels",
+         lambda: paper_figs.fig4_mac_channels(traces),
+         lambda r: "ideal_mean=%.1f%%;tdma_mean=%.1f%%;token_mean=%.1f%%" % (
+             100 * (r["_summary"]["ideal/1ch"]["mean"] - 1),
+             100 * (r["_summary"]["tdma/1ch"]["mean"] - 1),
+             100 * (r["_summary"]["token/1ch"]["mean"] - 1))),
         ("balancer_vs_sweep",
          lambda: paper_figs.balancer_vs_sweep(traces),
          lambda r: "balancer_wins=%d/%d" % (

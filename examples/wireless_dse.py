@@ -1,14 +1,16 @@
 """The paper's experiment, end to end: bottleneck characterisation, the
-wireless DSE, the Fig. 5 heatmap, and the beyond-paper balancer — on the
-144-TOPS 3x3-chiplet platform of Table 1.
+wireless DSE, the Fig. 5 heatmap, the beyond-paper network sweep (MAC
+protocols x channel plans) and the analytic balancer — on the 144-TOPS
+3x3-chiplet platform of Table 1.
 
     PYTHONPATH=src python examples/wireless_dse.py [workload]
 """
 
 import sys
 
-from repro.core import (WirelessConfig, balance, make_trace, simulate_wired,
-                        sweep)
+from repro.core import (ChannelPlan, MacConfig, NetworkConfig,
+                        WirelessConfig, balance, make_trace, network_sweep,
+                        simulate_wired, sweep)
 from repro.core.dse import INJECTIONS, THRESHOLDS
 from repro.core.simulator import simulate_hybrid
 from repro.core.workloads import WORKLOADS
@@ -44,10 +46,37 @@ def main():
             row.append(100 * (b / h.total_time - 1))
         print(f"  {thr}   " + " ".join(f"{v:5.1f}" for v in row))
 
-    bal = balance(tr, WirelessConfig(96e9 / 8))
-    print(f"\nbeyond-paper balancer: {100*(bal.speedup_vs_wired-1):.1f}% "
-          f"(injected {bal.injected_fraction:.0%} of eligible volume, "
-          f"{bal.sim.wireless_energy_j*1e6:.1f} uJ wireless energy)")
+    # --- beyond-paper: how much of the idealized speedup survives a
+    # real MAC, and whether splitting the band into channels helps ---
+    ns = network_sweep(tr, wl)
+    table = ns.best_by_network()
+    ideal = table[("ideal", "1ch")]
+    print("\nnetwork sweep (best % speedup over thr x inj x bw, per "
+          "MAC x channel plan; batched engine):")
+    plans = sorted({k[1] for k in table})
+    print("  mac   " + " ".join(f"{p:>16s}" for p in plans))
+    for mac in ("ideal", "tdma", "token"):
+        cells = []
+        for p in plans:
+            sp = table[(mac, p)]
+            cells.append(f"{100*(sp-1):7.1f}%"
+                         f" ({100*(sp-ideal):+5.1f})")
+        print(f"  {mac:5s} " + " ".join(f"{c:>16s}" for c in cells))
+    print(f"best network config: {ns.best_config.describe()} "
+          f"-> {100*(ns.best_speedup-1):.1f}% "
+          f"(idealized optimum keeps {100*(ideal-1):.1f}%)")
+
+    for name, net in (
+            ("ideal", NetworkConfig(96e9 / 8)),
+            ("tdma 2ch", NetworkConfig(96e9 / 8, mac=MacConfig("tdma"),
+                                       channels=ChannelPlan(2,
+                                                            "interleaved"))),
+    ):
+        bal = balance(tr, net)
+        print(f"\nbeyond-paper balancer [{name}]: "
+              f"{100*(bal.speedup_vs_wired-1):.1f}% "
+              f"(injected {bal.injected_fraction:.0%} of eligible volume, "
+              f"{bal.sim.wireless_energy_j*1e6:.1f} uJ wireless energy)")
 
 
 if __name__ == "__main__":

@@ -1,20 +1,30 @@
 """Core: the paper's contribution.
 
-Package-scale reproduction (GEMINI-like simulator + wireless overlay) and
-the TPU-scale adaptation (hybrid collective plane scheduler + balancer).
+Package-scale reproduction (GEMINI-like simulator + wireless overlay),
+the wireless NoP network subsystem (`repro.net`: MAC arbitration,
+multi-channel plans, vectorized design-space engine) and the TPU-scale
+adaptation (hybrid collective plane scheduler + balancer).
 """
 
+from repro.net import ChannelPlan, MacConfig, NetworkConfig, as_network
+
 from .topology import AcceleratorConfig, Topology, build_topology
-from .wireless import WirelessConfig, select_wireless, eligibility
+from .wireless import (WirelessConfig, select_wireless, eligibility,
+                       injection_hash)
 from .simulator import (SimResult, make_trace, simulate_hybrid,
                         simulate_wired, speedup)
-from .dse import sweep, sweep_all, summary, SweepResult
+from .dse import (sweep, sweep_all, summary, SweepResult,
+                  network_sweep, network_sweep_all, network_summary,
+                  NetworkSweepResult, batched_design_space)
 from .balancer import balance, BalancerResult
 
 __all__ = [
     "AcceleratorConfig", "Topology", "build_topology",
-    "WirelessConfig", "select_wireless", "eligibility",
+    "WirelessConfig", "select_wireless", "eligibility", "injection_hash",
+    "NetworkConfig", "ChannelPlan", "MacConfig", "as_network",
     "SimResult", "make_trace", "simulate_hybrid", "simulate_wired",
     "speedup", "sweep", "sweep_all", "summary", "SweepResult",
+    "network_sweep", "network_sweep_all", "network_summary",
+    "NetworkSweepResult", "batched_design_space",
     "balance", "BalancerResult",
 ]

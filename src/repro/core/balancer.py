@@ -6,21 +6,29 @@ planes" is needed (SIV-B, SV) but leaves it to future work.  We build it.
 
 Observation: per layer, the hybrid layer time is
 
-    T(v) = max(T_rest, worst_cut_wired(V - v) / BW_cut, v / B_wl)
+    T(v) = max(T_rest, worst_cut_wired(V - v) / BW_cut, T_mac(v))
 
 where v is the volume steered to the wireless plane out of the eligible
-volume V.  The wired term falls and the wireless term rises monotonically
-in v, so the optimum equalises them (water-filling), clipped by
-eligibility and by T_rest (compute/DRAM/NoC floor) — there is no benefit
-in rebalancing past the point where another element is the bottleneck.
+volume V and T_mac is the MAC-costed service time of the hottest
+wireless channel.  The wired term falls and the wireless term rises
+monotonically in v, so the optimum equalises them (water-filling),
+clipped by eligibility and by T_rest (compute/DRAM/NoC floor) — there
+is no benefit in rebalancing past the point where another element is
+the bottleneck.
 
 Greedy realisation: per layer, repeatedly move the eligible packet that
-contributes most to the currently hottest mesh cut, while the wireless
-plane finishes no later than the wired one and the NoP still exceeds the
-layer's floor.  Because the balancer chooses per-packet with the exact
-cut-cost model (instead of one global Bernoulli rate), it matches or beats
-every (threshold, injection) grid point of the paper's sweep on the same
-trace — verified in tests/test_paper_repro.py.
+contributes most to the currently hottest mesh cut, while the hottest
+wireless *channel* (under the configured MAC protocol and channel
+plan) finishes no later than the hottest wired cut and the NoP still
+exceeds the layer's floor.  A packet whose acceptance would overshoot
+the wired time is discarded from candidacy (the wired side only gets
+cheaper and the wireless side only costlier, so it can never become
+acceptable later) and the search continues with smaller contributors.
+Because the balancer chooses per-packet with the exact cut-cost model
+(instead of one global Bernoulli rate), it matches or beats every
+(threshold, injection) grid point of the paper's sweep on the same
+trace and network configuration — verified in tests/test_paper_repro.py
+and tests/test_net.py.
 """
 
 from __future__ import annotations
@@ -29,7 +37,11 @@ import dataclasses
 
 import numpy as np
 
-from .simulator import SimResult, _finalize, simulate_wired
+from repro.net.config import NetworkConfig, as_network
+from repro.net.mac import mac_times
+from repro.net.stack import network_layer_times
+
+from .simulator import SimResult, _finalize, energy_joules, simulate_wired
 from .traffic import TrafficTrace
 from .wireless import WirelessConfig, eligibility, wireless_energy_joules
 
@@ -42,7 +54,15 @@ class BalancerResult:
     injected_fraction: float      # of eligible volume
 
 
-def balance(trace: TrafficTrace, wcfg: WirelessConfig) -> BalancerResult:
+def balance(trace: TrafficTrace,
+            wcfg: WirelessConfig | NetworkConfig) -> BalancerResult:
+    net = as_network(wcfg)
+    plan, mac = net.channels, net.mac
+    n_ch = plan.n_channels
+    ch_of_node = plan.assign(trace.topo.n_nodes)
+    pkt_ch = ch_of_node[trace.src]
+    bw_c = plan.channel_bandwidth(net.bandwidth)
+
     cut_mat, cut_bw = trace.cut_matrix()
     eligible = eligibility(trace, threshold=1)  # balancer sees everything
     loads = trace.baseline_link_loads()
@@ -54,7 +74,6 @@ def balance(trace: TrafficTrace, wcfg: WirelessConfig) -> BalancerResult:
     starts = np.searchsorted(inc_msg, np.arange(len(trace.nbytes) + 1))
 
     injected = np.zeros(len(trace.nbytes), bool)
-    t_wireless = np.zeros(trace.n_layers)
     t_rest = np.maximum.reduce([trace.t_compute, trace.t_dram, trace.t_noc])
 
     for li in range(trace.n_layers):
@@ -62,16 +81,24 @@ def balance(trace: TrafficTrace, wcfg: WirelessConfig) -> BalancerResult:
         if cand.size == 0:
             continue
         layer_loads = loads[li].copy()
-        wl_bytes = 0.0
+        # per-channel aggregates on this layer's wireless plane
+        ch_bytes = np.zeros(n_ch)
+        ch_msgs = np.zeros(n_ch)
+        ch_srcs = [set() for _ in range(n_ch)]
+        ch_active = np.zeros(n_ch)
         remaining = list(cand)
+        state_changed = True
         while remaining:
-            cut_loads = layer_loads @ cut_mat
-            hot = int((cut_loads / cut_bw).argmax())
-            t_nop = cut_loads[hot] / cut_bw[hot]
-            t_wl = wl_bytes / wcfg.bandwidth
-            if t_nop <= t_wl or t_nop <= t_rest[li]:
-                break  # balanced, or another element already dominates
-            hot_links = np.nonzero(cut_mat[:, hot])[0]
+            if state_changed:  # rejections leave the planes untouched
+                cut_loads = layer_loads @ cut_mat
+                hot = int((cut_loads / cut_bw).argmax())
+                t_nop = cut_loads[hot] / cut_bw[hot]
+                t_wl = float(mac_times(mac, ch_bytes, ch_msgs, ch_active,
+                                       bw_c).max())
+                if t_nop <= t_wl or t_nop <= t_rest[li]:
+                    break  # balanced, or another element already dominates
+                hot_links = np.nonzero(cut_mat[:, hot])[0]
+                state_changed = False
             # eligible packet contributing most to the hot cut
             best_j, best_c = -1, 0.0
             for j, mi in enumerate(remaining):
@@ -82,20 +109,39 @@ def balance(trace: TrafficTrace, wcfg: WirelessConfig) -> BalancerResult:
             if best_j < 0:
                 break  # nothing eligible touches the hot cut
             mi = remaining.pop(best_j)
-            # accept only while the wireless plane stays the earlier finisher
-            new_wl = (wl_bytes + trace.nbytes[mi]) / wcfg.bandwidth
-            if new_wl > t_nop and wl_bytes > 0:
-                break
+            ch = pkt_ch[mi]
+            # trial: this packet lands on its source's channel
+            new_bytes = ch_bytes[ch] + trace.nbytes[mi]
+            new_active = len(ch_srcs[ch] | {int(trace.src[mi])})
+            new_t_ch = float(mac_times(mac, new_bytes, ch_msgs[ch] + 1,
+                                       new_active, bw_c))
+            # accept only if the wireless plane stays the earlier
+            # finisher; a rejected packet can never fit later (the wired
+            # side only falls, the wireless side only rises) — drop it
+            # and keep searching smaller contributors
+            if max(t_wl, new_t_ch) > t_nop:
+                continue
             injected[mi] = True
-            wl_bytes += trace.nbytes[mi]
+            ch_bytes[ch] = new_bytes
+            ch_msgs[ch] += 1
+            ch_srcs[ch].add(int(trace.src[mi]))
+            ch_active[ch] = len(ch_srcs[ch])
             lks = inc_link[starts[mi]:starts[mi + 1]]
             layer_loads[lks] -= trace.nbytes[mi]
-        t_wireless[li] = wl_bytes / wcfg.bandwidth
+            state_changed = True
         loads[li] = layer_loads
 
+    # re-derive the wireless timeline + MAC energy overhead from the final
+    # injected set through the same stack the simulator uses
+    t_wireless, wl_bytes, extra_bytes = network_layer_times(
+        trace.n_layers, trace.layer, trace.nbytes, trace.src,
+        trace.topo.n_nodes, injected, net)
     sim = _finalize(trace, loads, t_wireless)
-    sim.wireless_bytes = float(trace.nbytes[injected].sum())
-    sim.wireless_energy_j = wireless_energy_joules(trace, injected, wcfg)
+    sim.wireless_bytes = float(wl_bytes.sum())
+    sim.wireless_energy_j = wireless_energy_joules(trace, injected, net,
+                                                   extra_bytes)
+    sim.energy_j = energy_joules(trace, loads,
+                                 sim.wireless_bytes + extra_bytes)
     base = simulate_wired(trace).total_time
     elig_vol = float(trace.nbytes[eligible].sum()) or 1.0
     return BalancerResult(

@@ -21,6 +21,9 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.net.config import NetworkConfig, as_network
+from repro.net.stack import network_layer_times
+
 from .mapper import pipeline_mapping, spatial_mapping
 from .topology import AcceleratorConfig, build_topology
 from .traffic import TrafficTrace, build_trace
@@ -105,9 +108,16 @@ def simulate_wired(trace: TrafficTrace) -> SimResult:
     return res
 
 
-def simulate_hybrid(trace: TrafficTrace, wcfg: WirelessConfig) -> SimResult:
-    """Hybrid wired+wireless under the paper's decision function."""
-    injected = select_wireless(trace, wcfg)
+def simulate_hybrid(trace: TrafficTrace,
+                    wcfg: WirelessConfig | NetworkConfig) -> SimResult:
+    """Hybrid wired+wireless under the paper's decision function.
+
+    Accepts the legacy `WirelessConfig` (single shared channel, ideal
+    MAC — the paper's model) or a `repro.net.NetworkConfig` with an
+    explicit MAC protocol and multi-channel plan.
+    """
+    net = as_network(wcfg)
+    injected = select_wireless(trace, net)
 
     # wired plane: baseline loads minus the injected messages' contributions
     loads = trace.baseline_link_loads()
@@ -118,15 +128,18 @@ def simulate_hybrid(trace: TrafficTrace, wcfg: WirelessConfig) -> SimResult:
         trace.nbytes[trace.inc_msg[inj_edges]],
     )
 
-    # wireless plane: single shared channel, volume/bandwidth per layer
-    wl_bytes = np.zeros(trace.n_layers)
-    np.add.at(wl_bytes, trace.layer[injected], trace.nbytes[injected])
-    t_wireless = wl_bytes / wcfg.bandwidth
+    # wireless plane: per-channel MAC-costed service, max over channels
+    # (degenerate 1-channel ideal plan == the paper's volume/bandwidth)
+    t_wireless, wl_bytes, extra_bytes = network_layer_times(
+        trace.n_layers, trace.layer, trace.nbytes, trace.src,
+        trace.topo.n_nodes, injected, net)
 
     res = _finalize(trace, loads, t_wireless)
     res.wireless_bytes = float(wl_bytes.sum())
-    res.wireless_energy_j = wireless_energy_joules(trace, injected, wcfg)
-    res.energy_j = energy_joules(trace, loads, res.wireless_bytes)
+    res.wireless_energy_j = wireless_energy_joules(trace, injected, net,
+                                                   extra_bytes)
+    res.energy_j = energy_joules(trace, loads,
+                                 res.wireless_bytes + extra_bytes)
     return res
 
 

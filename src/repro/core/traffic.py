@@ -69,6 +69,7 @@ class TrafficTrace:
     # per-message arrays
     layer: np.ndarray          # int32 (M,)
     nbytes: np.ndarray         # float64 (M,)
+    src: np.ndarray            # int32 (M,) source node (chiplet or DRAM) id
     is_multicast: np.ndarray   # bool (M,)
     is_multichip: np.ndarray   # bool (M,)
     max_hops: np.ndarray       # int32 (M,) max NoP hops src->any dst
@@ -204,6 +205,7 @@ def build_trace(layers: List[Layer], mapping: Mapping,
     inc_link: List[int] = []
     layer_l: List[int] = []
     nbytes_l: List[float] = []
+    src_l: List[int] = []
     is_mc_l: List[bool] = []
     is_xchip_l: List[bool] = []
     max_hops_l: List[int] = []
@@ -230,6 +232,7 @@ def build_trace(layers: List[Layer], mapping: Mapping,
                 pid = len(layer_l)
                 layer_l.append(m.layer)
                 nbytes_l.append(per)
+                src_l.append(m.src)
                 is_mc_l.append(mc)
                 is_xchip_l.append(xchip)
                 max_hops_l.append(hops)
@@ -238,6 +241,7 @@ def build_trace(layers: List[Layer], mapping: Mapping,
 
     layer_arr = np.asarray(layer_l, np.int32)
     nbytes = np.asarray(nbytes_l)
+    src_arr = np.asarray(src_l, np.int32)
     is_mc = np.asarray(is_mc_l, bool)
     is_xchip = np.asarray(is_xchip_l, bool)
     max_hops = np.asarray(max_hops_l, np.int32)
@@ -264,7 +268,7 @@ def build_trace(layers: List[Layer], mapping: Mapping,
 
     return TrafficTrace(
         topo=topo, n_layers=n_layers, link_index=link_index,
-        layer=layer_arr, nbytes=nbytes, is_multicast=is_mc,
+        layer=layer_arr, nbytes=nbytes, src=src_arr, is_multicast=is_mc,
         is_multichip=is_xchip, max_hops=max_hops,
         inc_msg=np.asarray(inc_msg, np.int32),
         inc_link=np.asarray(inc_link, np.int32),

@@ -45,19 +45,35 @@ def eligibility(trace: TrafficTrace, threshold: int) -> np.ndarray:
     return mc | far_unicast
 
 
+def injection_hash(n_messages: int) -> np.ndarray:
+    """Per-message low-discrepancy hash in [0, 1).
+
+    A message is injected at probability ``p`` iff its hash is < ``p``;
+    exposing the hash (rather than only the boolean filter) lets the
+    batched design-space engine (`repro.net.batched`) bucket each
+    message's fate across the whole injection axis at once.
+    """
+    idx = np.arange(n_messages, dtype=np.float64)
+    return np.modf(idx * _PHI)[0]
+
+
 def injection_filter(n_messages: int, prob: float) -> np.ndarray:
     """Deterministic low-discrepancy stand-in for the Bernoulli filter."""
-    idx = np.arange(n_messages, dtype=np.float64)
-    return np.modf(idx * _PHI)[0] < prob
+    return injection_hash(n_messages) < prob
 
 
-def select_wireless(trace: TrafficTrace, cfg: WirelessConfig) -> np.ndarray:
-    """Messages designated for the wireless plane under `cfg`."""
+def select_wireless(trace: TrafficTrace, cfg) -> np.ndarray:
+    """Messages designated for the wireless plane under `cfg`.
+
+    `cfg` is a `WirelessConfig` or any config exposing the same
+    selection attributes (e.g. `repro.net.NetworkConfig`).
+    """
     ok = eligibility(trace, cfg.distance_threshold)
     return ok & injection_filter(len(ok), cfg.injection_prob)
 
 
 def wireless_energy_joules(trace: TrafficTrace, injected: np.ndarray,
-                           cfg: WirelessConfig) -> float:
-    bits = float(trace.nbytes[injected].sum()) * 8.0
+                           cfg, extra_bytes: float = 0.0) -> float:
+    """Transceiver energy for the injected payload (+ MAC overhead bytes)."""
+    bits = (float(trace.nbytes[injected].sum()) + extra_bytes) * 8.0
     return bits * cfg.energy_pj_per_bit * 1e-12

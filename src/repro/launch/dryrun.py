@@ -31,7 +31,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, cells, get_arch
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
+from repro.launch.roofline import cost_analysis
 from repro.launch import roofline as RL
 from repro.launch.unit_programs import (decode_unit_programs,
                                         train_unit_programs)
@@ -101,7 +102,7 @@ def lower_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
         st_sh = sharding_overrides(mesh, abstract_state, st_sh)
     batch = input_specs(cfg, shape)
     b_sh = logical_batch_shardings(mesh, batch)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(
             step_fn, in_shardings=(st_sh, b_sh),
             out_shardings=(st_sh, NamedSharding(mesh, P())),
@@ -124,7 +125,7 @@ def lower_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
         logits, _ = model.apply(params, batch)
         return logits[:, -1]
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(prefill, in_shardings=(p_sh, b_sh)).lower(
             abstract_params, batch)
         compiled = lowered.compile()
@@ -145,7 +146,7 @@ def lower_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
     def serve_step(params, cache, token, pos):
         return model.decode(params, cache, token, pos)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(
             serve_step,
             in_shardings=(p_sh, c_sh, t_sh, rep),
@@ -182,7 +183,7 @@ def lower_unit(fn, abstract_args, mesh):
         if getattr(a, "ndim", 0) >= 2
         else NamedSharding(mesh, P())
         for a in abstract_args)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(fn, in_shardings=shardings).lower(*abstract_args)
         return lowered.compile()
 
@@ -214,7 +215,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                   cfg, shape, mesh, attention_impl,
                   train_overrides=train_overrides)
           result["memory"] = _mem_dict(compiled.memory_analysis())
-          ca = compiled.cost_analysis() or {}
+          ca = cost_analysis(compiled)
           result["cost_analysis"] = {k: float(v) for k, v in ca.items()
                                      if isinstance(v, (int, float))}
 

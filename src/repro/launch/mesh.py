@@ -9,18 +9,71 @@ from __future__ import annotations
 import jax
 
 
+def make_auto_mesh(shape, axes):
+    """`jax.make_mesh` with Auto axis types across jax versions.
+
+    Newer jax exposes `jax.sharding.AxisType` and `make_mesh` takes
+    `axis_types`; on older versions (<= 0.4.x) every axis is Auto by
+    default and the parameter does not exist.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def use_mesh(mesh):
+    """`jax.set_mesh(mesh)` across jax versions.
+
+    Older jax (<= 0.4.x) has no `jax.set_mesh`; there the `Mesh` object
+    itself is the context manager that installs the ambient mesh.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """`jax.sharding.get_abstract_mesh()` across jax versions.
+
+    Older jax has no abstract-mesh tracking; there the ambient mesh
+    installed by the `Mesh` context manager is the equivalent.  Both
+    expose `.shape` as an axis-name -> size mapping (empty when no mesh
+    is active), which is all callers rely on.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def shard_map(f, **kwargs):
+    """`jax.shard_map` across jax versions.
+
+    On 0.4.x it lives in `jax.experimental.shard_map` and the replication
+    check is spelled `check_rep` instead of `check_vma`.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+    return fn(f, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips (one v5e pod).
     Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis
     carries cross-pod data parallelism over DCN."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever this host offers (tests / examples on CPU)."""
     n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_auto_mesh((1, n), ("data", "model"))

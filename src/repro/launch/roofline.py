@@ -141,16 +141,28 @@ class Roofline:
         }
 
 
+def cost_analysis(compiled) -> Dict:
+    """`Compiled.cost_analysis()` normalized across jax versions.
+
+    Older jax returns a list with one per-device dict, newer jax the
+    dict itself; either may be empty/None for trivial programs.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def extract(compiled, n_units: int = 1,
             unit_compiled=None) -> Roofline:
     """Roofline terms from compiled artifacts with scan-body extrapolation:
     total = full + (n_units - 1) * unit."""
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     coll = collective_bytes(compiled.as_text())
     if unit_compiled is not None and n_units > 1:
-        uca = unit_compiled.cost_analysis() or {}
+        uca = cost_analysis(unit_compiled)
         ucoll = collective_bytes(unit_compiled.as_text())
         k = n_units - 1
         flops += k * float(uca.get("flops", 0.0))

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, reduced
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                                   use_mesh)
 from repro.models import build_model
 from repro.runtime.parallel import ParallelContext, parallel_context
 from repro.runtime.serve import ServeConfig, make_serve_fns
@@ -37,7 +38,7 @@ def main():
             else make_production_mesh(multi_pod=args.mesh == "multipod"))
     scfg = ServeConfig(max_len=args.max_len)
 
-    with jax.set_mesh(mesh), parallel_context(ParallelContext()):
+    with use_mesh(mesh), parallel_context(ParallelContext()):
         model = build_model(cfg, remat=False)
         params = model.init(jax.random.PRNGKey(0))
         _, decode_step, init_cache = make_serve_fns(cfg, scfg)

@@ -24,7 +24,8 @@ from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_steps,
                                            restore)
 from repro.configs import ARCHS, reduced
 from repro.data.pipeline import DataConfig, batch_for_model
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                                   use_mesh)
 from repro.optim.optimizers import OptimizerConfig
 from repro.runtime.compression import CompressionConfig
 from repro.runtime.fault_tolerance import StragglerMitigator
@@ -76,7 +77,7 @@ def main():
           f"params~{cfg.param_count()/1e6:.1f}M opt={opt_name} "
           f"mesh={dict(mesh.shape)}")
 
-    with jax.set_mesh(mesh), parallel_context(ParallelContext()):
+    with use_mesh(mesh), parallel_context(ParallelContext()):
         abstract = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0)))
         st_sh = state_shardings(mesh, abstract, opt_name)
         jit_init = jax.jit(init_fn, out_shardings=st_sh)

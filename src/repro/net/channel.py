@@ -1,0 +1,73 @@
+"""Wireless channel plane: single shared channel or FDM multi-channel.
+
+The paper's platform has one antenna per chiplet/DRAM module tuned to a
+single shared frequency band; serialization per layer is one global
+`volume / bandwidth` term.  Graphene-class agile transceivers motivate
+splitting the band into several frequency channels with each node's
+transmitter tuned to its zone's channel: transmissions on different
+channels proceed concurrently, so the per-layer wireless time becomes a
+per-channel max instead of one global sum.
+
+Zone assignment policies (node id -> channel):
+
+- ``contiguous``: equal blocks of consecutive node ids.  Matches a
+  physical-layout zoning (neighbouring chiplets share a channel), which
+  concentrates a pipeline stage's traffic on one channel.
+- ``interleaved``: round-robin ``node % n_channels``.  Spreads adjacent
+  (and therefore usually co-active) transmitters across channels, which
+  balances per-channel load for pipeline mappings.
+
+``n_channels == 1`` reproduces today's single-channel behaviour
+bit-for-bit regardless of policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+POLICIES = ("contiguous", "interleaved")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelPlan:
+    """Frequency-division plan for the wireless plane.
+
+    ``bandwidth_per_channel=None`` divides the aggregate wireless
+    bandwidth evenly, i.e. the comparison against the single shared
+    channel is at equal aggregate bandwidth.  A float pins each
+    channel's rate instead (aggregate then scales with ``n_channels``).
+    """
+
+    n_channels: int = 1
+    policy: str = "contiguous"
+    bandwidth_per_channel: float | None = None
+
+    def __post_init__(self):
+        if self.n_channels < 1:
+            raise ValueError(f"n_channels must be >= 1, got {self.n_channels}")
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}")
+
+    def channel_bandwidth(self, aggregate_bw: float) -> float:
+        """Per-channel service rate in B/s."""
+        if self.bandwidth_per_channel is not None:
+            return self.bandwidth_per_channel
+        return aggregate_bw / self.n_channels
+
+    def assign(self, n_nodes: int) -> np.ndarray:
+        """Channel id per node (compute chiplets then DRAM modules)."""
+        nodes = np.arange(n_nodes)
+        if self.n_channels == 1:
+            return np.zeros(n_nodes, np.int64)
+        if self.policy == "interleaved":
+            return nodes % self.n_channels
+        # contiguous equal blocks (last block absorbs the remainder)
+        return np.minimum(nodes * self.n_channels // max(n_nodes, 1),
+                          self.n_channels - 1)
+
+    def describe(self) -> str:
+        if self.n_channels == 1:
+            return "1ch"
+        return f"{self.n_channels}ch-{self.policy}"

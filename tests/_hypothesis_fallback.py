@@ -1,0 +1,93 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The property-test modules prefer the real library (see
+requirements-dev.txt); in environments without it (e.g. offline
+containers) this fallback keeps them collectable and runs each property
+against a small low-discrepancy sample of the strategy domain —
+boundary values first, golden-ratio-spaced interior points after — so
+the invariants still get exercised deterministically instead of the
+whole module erroring out at import.
+
+Only the strategy surface this repo uses is implemented:
+`integers`, `floats`, `sampled_from`, `tuples`.
+"""
+
+from __future__ import annotations
+
+import math
+
+_PHI = 0.6180339887498949
+_MAX_FALLBACK_EXAMPLES = 12
+
+
+class _Strategy:
+    def __init__(self, sample_fn):
+        self._sample = sample_fn
+
+    def example_at(self, i: int):
+        return self._sample(i)
+
+
+def _lowdisc(i: int) -> float:
+    """i-th golden-ratio point in (0, 1)."""
+    return math.modf((i + 1) * _PHI)[0]
+
+
+class strategies:  # noqa: N801 - mirrors `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        span = max_value - min_value
+
+        def sample(i):
+            if i == 0:
+                return min_value
+            if i == 1:
+                return max_value
+            return min_value + int(_lowdisc(i) * (span + 1)) % (span + 1)
+        return _Strategy(sample)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        def sample(i):
+            if i == 0:
+                return min_value
+            if i == 1:
+                return max_value
+            return min_value + _lowdisc(i) * (max_value - min_value)
+        return _Strategy(sample)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda i: elements[i % len(elements)])
+
+    @staticmethod
+    def tuples(*strats: _Strategy) -> _Strategy:
+        return _Strategy(lambda i: tuple(s.example_at(i) for s in strats))
+
+
+st = strategies
+
+
+def settings(max_examples: int = 100, deadline=None, **_kw):
+    """Records the example budget; the fallback caps it (smoke subset)."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        budget = getattr(fn, "_fallback_max_examples", _MAX_FALLBACK_EXAMPLES)
+        n = min(budget, _MAX_FALLBACK_EXAMPLES)
+
+        # zero-arg wrapper: every parameter is strategy-supplied, and the
+        # signature must not leak them or pytest would hunt for fixtures
+        def wrapper():
+            for i in range(n):
+                fn(*(s.example_at(i) for s in strats))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

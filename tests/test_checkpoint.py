@@ -10,6 +10,7 @@ import pytest
 
 from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_steps,
                                            restore, save)
+from repro.launch.mesh import make_auto_mesh
 
 
 def _tree(key=0):
@@ -63,8 +64,7 @@ def test_elastic_restore_new_shardings(tmp_path):
     from jax.sharding import NamedSharding, PartitionSpec as P
     t = _tree()
     save(str(tmp_path), t, 1)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
     out = restore(str(tmp_path), t, shardings=sh)
     assert out["params"]["w"].sharding == NamedSharding(mesh, P())

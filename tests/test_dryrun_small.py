@@ -12,6 +12,8 @@ from repro.runtime.sharding import (logical_batch_shardings,
                                     state_shardings)
 from repro.runtime.train import TrainConfig, make_train_step
 from repro.optim.optimizers import OptimizerConfig
+from repro.launch.mesh import make_auto_mesh, use_mesh
+from repro.launch.roofline import cost_analysis
 
 
 def test_lower_compile_reduced_arch():
@@ -20,19 +22,18 @@ def test_lower_compile_reduced_arch():
     step_fn, init_fn = make_train_step(cfg, tcfg)
     abstract_state = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0)))
     n = len(jax.devices())
-    mesh = jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((1, n), ("data", "model"))
     st_sh = state_shardings(mesh, abstract_state, "adamw")
     batch = {"tokens": jax.ShapeDtypeStruct((2, 32), jnp.int32),
              "labels": jax.ShapeDtypeStruct((2, 32), jnp.int32)}
     b_sh = logical_batch_shardings(mesh, batch)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         compiled = jax.jit(step_fn, in_shardings=(st_sh, b_sh),
                            out_shardings=(st_sh, NamedSharding(mesh, P()))
                            ).lower(abstract_state, batch).compile()
     ma = compiled.memory_analysis()
     assert ma.argument_size_in_bytes > 0
-    assert (compiled.cost_analysis() or {}).get("flops", 0) > 0
+    assert cost_analysis(compiled).get("flops", 0) > 0
 
 
 def test_dryrun_results_complete():

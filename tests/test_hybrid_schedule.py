@@ -2,7 +2,10 @@
 saturation, balancer optimality (mirrors the package-scale properties)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: deterministic smoke-subset fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.hybrid_schedule import (PlaneConfig, balance_cell,
                                         flows_from_coll_per_op,

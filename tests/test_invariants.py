@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: deterministic smoke-subset fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs import ARCHS, reduced
 from repro.core.topology import build_topology, nearest_dram

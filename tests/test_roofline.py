@@ -8,8 +8,10 @@ import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.launch.mesh import make_auto_mesh, use_mesh
 from repro.launch.roofline import (CollectiveStats, Roofline,
-                                   collective_bytes, _type_bytes, extract)
+                                   collective_bytes, cost_analysis,
+                                   _type_bytes, extract)
 
 
 def test_type_bytes():
@@ -22,8 +24,7 @@ def test_type_bytes():
 def _mesh2():
     if len(jax.devices()) < 2:
         pytest.skip("needs >=2 devices")
-    return jax.make_mesh((1, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_auto_mesh((1, 2), ("data", "model"))
 
 
 def test_collective_parser_finds_allreduce():
@@ -34,7 +35,7 @@ def test_collective_parser_finds_allreduce():
         return jnp.sum(x @ x.T)  # contraction over the sharded dim -> AR
 
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         compiled = jax.jit(f, in_shardings=sh).lower(x).compile()
     stats = collective_bytes(compiled.as_text())
     assert stats.payload_bytes > 0
@@ -52,7 +53,7 @@ def test_scan_body_counted_once():
             return y
         x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
         w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
-        return jax.jit(f).lower(x, w).compile().cost_analysis()["flops"]
+        return cost_analysis(jax.jit(f).lower(x, w).compile())["flops"]
 
     assert make(2) == make(8)
 

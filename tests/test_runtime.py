@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: deterministic smoke-subset fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.data.pipeline import DataConfig, synthetic_batch
 from repro.optim.optimizers import (OptimizerConfig, build_optimizer,
@@ -17,6 +20,7 @@ from repro.runtime.compression import (CompressionConfig,
                                        compress_with_error_feedback,
                                        init_residual)
 from repro.runtime.sharding import batch_spec, cache_spec, param_spec
+from repro.launch.mesh import make_auto_mesh
 
 
 # --------------------------------------------------------------------------
@@ -133,9 +137,8 @@ def test_data_deterministic_and_step_indexed():
 # --------------------------------------------------------------------------
 
 def _mesh():
-    return jax.make_mesh(
-        (1, len(jax.devices())), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_auto_mesh(
+        (1, len(jax.devices())), ("data", "model"))
 
 
 @given(st.sampled_from(["wq", "wk", "wv", "wo", "w_up", "w_down", "table",
