@@ -6,7 +6,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.core.hybrid_schedule import balance_cell, sweep_cell
 

@@ -2,8 +2,6 @@
 
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import (WirelessConfig, balance, make_trace,
                         network_summary, network_sweep_all, simulate_hybrid,
                         simulate_wired, sweep_all, summary)
@@ -89,6 +87,25 @@ def balancer_vs_sweep(traces=None) -> dict:
                    "balancer": b.speedup_vs_wired,
                    "injected_fraction": b.injected_fraction}
     return out
+
+
+def fig_sim_fidelity(traces=None) -> dict:
+    """Beyond-paper fidelity figure: event-driven vs analytic, per
+    workload.  The striped link model must reproduce the analytic
+    hybrid speedup (the paper's cut idealization, time-resolved); the
+    adaptive and fixed-XY models quantify how much network time that
+    idealization hides."""
+    from repro.sim import fidelity_report
+    return fidelity_report(traces or _traces())
+
+
+def fig_sim_policies(traces=None) -> dict:
+    """Beyond-paper policy figure: the paper's offline-swept static
+    optimum vs online wired/wireless load-balancing policies (greedy
+    per-packet, adaptive per-layer) and the offline water-filling
+    oracle, all event-driven on the same traces."""
+    from repro.sim import policy_report
+    return policy_report(traces or _traces())
 
 
 def mapping_sensitivity(traces=None) -> dict:

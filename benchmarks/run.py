@@ -47,6 +47,19 @@ def main() -> None:
              100 * (r["_summary"]["ideal/1ch"]["mean"] - 1),
              100 * (r["_summary"]["tdma/1ch"]["mean"] - 1),
              100 * (r["_summary"]["token/1ch"]["mean"] - 1))),
+        ("sim_fidelity",
+         lambda: paper_figs.fig_sim_fidelity(traces),
+         lambda r: "striped_err=%.1e;adaptive_err=%.1f%%;xy_err=%.1f%%" % (
+             r["_summary"]["striped"]["worst_speedup_rel_err"],
+             100 * r["_summary"]["adaptive"]["worst_speedup_rel_err"],
+             100 * r["_summary"]["xy"]["worst_speedup_rel_err"])),
+        ("sim_policies",
+         lambda: paper_figs.fig_sim_policies(traces),
+         lambda r: "adaptive_beats_grid=%s;greedy_beats_grid=%s;"
+         "mean_adaptive=%.1f%%" % (
+             r["_summary"]["adaptive"]["beats_grid"],
+             r["_summary"]["greedy"]["beats_grid"],
+             100 * (r["_summary"]["adaptive"]["mean_speedup"] - 1))),
         ("balancer_vs_sweep",
          lambda: paper_figs.balancer_vs_sweep(traces),
          lambda r: "balancer_wins=%d/%d" % (

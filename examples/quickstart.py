@@ -12,7 +12,6 @@ import jax.numpy as jnp
 from repro.checkpoint.checkpointer import restore, save
 from repro.configs import ARCHS, reduced
 from repro.data.pipeline import DataConfig, batch_for_model
-from repro.models import build_model
 from repro.optim.optimizers import OptimizerConfig
 from repro.runtime.serve import ServeConfig, generate
 from repro.runtime.train import TrainConfig, make_train_step

@@ -11,8 +11,6 @@ smollm-360m config if you have the cycles.
 """
 
 import argparse
-import dataclasses
-import os
 import time
 
 import jax

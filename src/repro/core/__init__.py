@@ -15,8 +15,28 @@ from .simulator import (SimResult, make_trace, simulate_hybrid,
                         simulate_wired, speedup)
 from .dse import (sweep, sweep_all, summary, SweepResult,
                   network_sweep, network_sweep_all, network_summary,
-                  NetworkSweepResult, batched_design_space)
+                  NetworkSweepResult, batched_design_space,
+                  policy_sweep, policy_sweep_all, PolicySweepResult)
 from .balancer import balance, BalancerResult
+
+# `repro.sim` (the event-driven engine) is re-exported lazily (PEP 562):
+# it imports `repro.core` submodules, so an eager import here would make
+# the two packages' initialisation order observable.  Attribute access
+# resolves against the fully-initialised `repro.sim` on first use.
+_SIM_EXPORTS = (
+    "PacketSim", "EventResult", "simulate_events",
+    "StaticPolicy", "OraclePolicy", "GreedyPolicy", "AdaptivePolicy",
+    "FixedPolicy", "get_policy", "POLICIES",
+    "fidelity_report", "policy_report",
+)
+
+
+def __getattr__(name):
+    if name in _SIM_EXPORTS:
+        import repro.sim
+        return getattr(repro.sim, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "AcceleratorConfig", "Topology", "build_topology",
@@ -26,5 +46,7 @@ __all__ = [
     "speedup", "sweep", "sweep_all", "summary", "SweepResult",
     "network_sweep", "network_sweep_all", "network_summary",
     "NetworkSweepResult", "batched_design_space",
+    "policy_sweep", "policy_sweep_all", "PolicySweepResult",
     "balance", "BalancerResult",
+    *_SIM_EXPORTS,
 ]

@@ -27,7 +27,7 @@ from repro.net.config import NetworkConfig
 from repro.net.mac import MacConfig
 
 from .simulator import TrafficTrace, simulate_hybrid, simulate_wired
-from .wireless import WirelessConfig, eligibility, injection_hash
+from .wireless import eligibility, injection_hash
 
 # the paper's sweep axes (shared with GridSpec's defaults)
 THRESHOLDS = PAPER_THRESHOLDS
@@ -171,6 +171,67 @@ def network_sweep_all(traces: Dict[str, TrafficTrace],
                       macs=NETWORK_MACS,
                       plans=NETWORK_PLANS) -> List[NetworkSweepResult]:
     return [network_sweep(tr, wl, macs, plans) for wl, tr in traces.items()]
+
+
+@dataclasses.dataclass
+class PolicySweepResult:
+    """Event-driven policy comparison for one workload.
+
+    The paper's DSE picks ONE static (threshold x injection) point per
+    workload offline; the event-driven engine (`repro.sim`) lets online
+    policies compete with that optimum on the same trace and network.
+    """
+
+    workload: str
+    net: NetworkConfig
+    base_time: float               # event-driven all-wired baseline
+    grid_best_speedup: float       # best static grid point (same network)
+    policy_speedups: Dict[str, float]
+    policy_times: Dict[str, float]
+
+    def best_policy(self) -> Tuple[str, float]:
+        name = max(self.policy_speedups, key=self.policy_speedups.get)
+        return name, self.policy_speedups[name]
+
+
+def grid_best_speedup(trace: TrafficTrace, net: NetworkConfig) -> float:
+    """Best static (threshold x injection) speedup at ``net``'s
+    bandwidth / MAC / channel plan, via the batched engine — the single
+    anchor the event-driven policy comparisons measure against."""
+    bw = int(round(net.bandwidth * 8 / 1e9))
+    spec = GridSpec(bandwidths_gbps=(bw,), macs=(net.mac,),
+                    plans=(net.channels,))
+    return float(batched_design_space(trace).evaluate(spec).speedup.max())
+
+
+def policy_sweep(trace: TrafficTrace, workload: str,
+                 net: NetworkConfig | None = None,
+                 policies=("static", "greedy", "adaptive", "oracle")
+                 ) -> PolicySweepResult:
+    """Event-driven sweep of load-balancing policies on one workload.
+
+    The static grid best is evaluated with the batched engine (exact
+    for the event engine's default striped/ideal configuration).
+    """
+    from repro.sim import PacketSim    # late import: core re-exports sim
+    net = net or NetworkConfig(bandwidth=96e9 / 8)
+    grid_best = grid_best_speedup(trace, net)
+    sim = PacketSim(trace, net)
+    base = sim.run_wired().total_time
+    times = {p: sim.run(p).total_time for p in policies}
+    return PolicySweepResult(
+        workload=workload, net=net, base_time=base,
+        grid_best_speedup=grid_best,
+        policy_speedups={p: base / t for p, t in times.items()},
+        policy_times=times)
+
+
+def policy_sweep_all(traces: Dict[str, TrafficTrace],
+                     net: NetworkConfig | None = None,
+                     policies=("static", "greedy", "adaptive", "oracle")
+                     ) -> List[PolicySweepResult]:
+    return [policy_sweep(tr, wl, net, policies)
+            for wl, tr in traces.items()]
 
 
 def summary(results: List[SweepResult]) -> Dict[int, Tuple[float, float]]:

@@ -30,7 +30,7 @@ shared broadcast bandwidth per pod (~2 ICI links' worth, cf. the paper's
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.launch.roofline import ICI_BW, ICI_LINKS
 

@@ -89,7 +89,7 @@ def pipeline_mapping(layers: List[Layer], topo: Topology,
     # does not spray a 10-layer workload over 9 single-layer stages
     n_stages = min(n_stages or n, n, max(1, len(layers) // 3))
     order = snake_order(topo)
-    total = sum(l.macs for l in layers) or 1.0
+    total = sum(lyr.macs for lyr in layers) or 1.0
     # MAC-balanced contiguous segmentation...
     acc, stage = 0.0, 0
     stage_of: List[int] = []

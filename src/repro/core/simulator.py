@@ -156,7 +156,7 @@ def make_trace(workload: str, acc: AcceleratorConfig | None = None,
     return build_trace(layers, mapper(layers, topo), topo)
 
 
-def speedup(trace: TrafficTrace, wcfg: WirelessConfig) -> float:
+def speedup(trace: TrafficTrace, wcfg: WirelessConfig | NetworkConfig) -> float:
     base = simulate_wired(trace).total_time
     hybrid = simulate_hybrid(trace, wcfg).total_time
     return base / hybrid

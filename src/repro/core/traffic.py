@@ -73,6 +73,7 @@ class TrafficTrace:
     is_multicast: np.ndarray   # bool (M,)
     is_multichip: np.ndarray   # bool (M,)
     max_hops: np.ndarray       # int32 (M,) max NoP hops src->any dst
+    dram_node: np.ndarray      # int32 (M,) DRAM port index served, -1 if none
     # sparse (message -> link) incidence
     inc_msg: np.ndarray        # int32 (E,)
     inc_link: np.ndarray       # int32 (E,)
@@ -209,9 +210,15 @@ def build_trace(layers: List[Layer], mapping: Mapping,
     is_mc_l: List[bool] = []
     is_xchip_l: List[bool] = []
     max_hops_l: List[int] = []
+    dram_l: List[int] = []
 
+    n_chip = cfg.n_chiplets
     for m in msgs:
         hops = max(topo.nop_hops(m.src, d) for d in m.dsts)
+        # DRAM port this message occupies (wstream/spill traffic), as a
+        # 0-based index into the DRAM modules; -1 for chiplet-to-chiplet.
+        dram = m.src - n_chip if m.src >= n_chip else \
+            next((d - n_chip for d in m.dsts if d >= n_chip), -1)
         # chiplet-to-chiplet activation tensors fan out to the destination
         # chiplet's PE array: multicast in the NoC/NoP sense (paper SIII-B2)
         # even with a single destination chiplet.  DMA-style weight streams
@@ -236,6 +243,7 @@ def build_trace(layers: List[Layer], mapping: Mapping,
                 is_mc_l.append(mc)
                 is_xchip_l.append(xchip)
                 max_hops_l.append(hops)
+                dram_l.append(dram)
                 inc_msg.extend([pid] * len(route))
                 inc_link.extend(route)
 
@@ -249,9 +257,10 @@ def build_trace(layers: List[Layer], mapping: Mapping,
     # --- wireless-independent per-layer terms ---
     # compute: layer runs on its mapped chiplets at the derated peak rate
     t_comp = np.array([
-        2.0 * l.macs / (cfg.tops_per_chiplet * max(1, len(mapping.chiplets[i]))
-                        * COMPUTE_EFFICIENCY)
-        for i, l in enumerate(layers)])
+        2.0 * lyr.macs / (cfg.tops_per_chiplet
+                          * max(1, len(mapping.chiplets[i]))
+                          * COMPUTE_EFFICIENCY)
+        for i, lyr in enumerate(layers)])
     dram_bytes = np.zeros(n_layers)
     for m in msgs:
         if m.kind in ("wstream", "spill_r", "spill_w"):
@@ -260,20 +269,21 @@ def build_trace(layers: List[Layer], mapping: Mapping,
     # NoC: tile in + tile out + (streamed) weight slice through the
     # chiplet-local mesh; chiplets operate in parallel.
     t_noc = np.zeros(n_layers)
-    for i, l in enumerate(layers):
+    for i, lyr in enumerate(layers):
         n_exec = max(1, len(mapping.chiplets[i]))
-        w_local = l.weights / n_exec if _streamed(l) else 0.0
-        t_noc[i] = ((l.act_in + l.act_out) / n_exec + w_local) \
+        w_local = lyr.weights / n_exec if _streamed(lyr) else 0.0
+        t_noc[i] = ((lyr.act_in + lyr.act_out) / n_exec + w_local) \
             / (cfg.noc_bw_per_port * NOC_PARALLEL)
 
     return TrafficTrace(
         topo=topo, n_layers=n_layers, link_index=link_index,
         layer=layer_arr, nbytes=nbytes, src=src_arr, is_multicast=is_mc,
         is_multichip=is_xchip, max_hops=max_hops,
+        dram_node=np.asarray(dram_l, np.int32),
         inc_msg=np.asarray(inc_msg, np.int32),
         inc_link=np.asarray(inc_link, np.int32),
         t_compute=t_comp, t_dram=t_dram, t_noc=t_noc,
         dram_bytes=dram_bytes, messages=msgs,
-        total_macs=float(sum(l.macs for l in layers)),
-        noc_bytes=float(sum(l.act_in + l.act_out for l in layers)),
+        total_macs=float(sum(lyr.macs for lyr in layers)),
+        noc_bytes=float(sum(lyr.act_in + lyr.act_out for lyr in layers)),
     )

@@ -17,8 +17,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig

@@ -71,8 +71,8 @@ def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(ik == nk - 1)
     def _finish():
-        l = jnp.maximum(l_scr[...], 1e-37)
-        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lse = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0, 0] = (acc_scr[...] / lse[:, None]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "causal", "window",

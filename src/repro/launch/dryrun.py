@@ -20,7 +20,6 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -160,7 +159,6 @@ def lower_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
 def lower_unit(fn, abstract_args, mesh):
     """Lower a unit program with rule-derived shardings for each arg."""
     from repro.runtime.sharding import batch_spec, cache_spec, param_spec
-    import numpy as np
 
     def shard_tree(tree):
         flat, treedef = jax.tree_util.tree_flatten_with_path(tree)

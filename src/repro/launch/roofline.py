@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 # TPU v5e constants (per chip)
 PEAK_FLOPS = 197e12          # bf16

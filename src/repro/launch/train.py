@@ -18,7 +18,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_steps,
                                            restore)
@@ -30,8 +29,7 @@ from repro.optim.optimizers import OptimizerConfig
 from repro.runtime.compression import CompressionConfig
 from repro.runtime.fault_tolerance import StragglerMitigator
 from repro.runtime.parallel import ParallelContext, parallel_context
-from repro.runtime.sharding import (logical_batch_shardings,
-                                    state_shardings)
+from repro.runtime.sharding import state_shardings
 from repro.runtime.train import TrainConfig, make_train_step
 
 

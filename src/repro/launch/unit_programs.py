@@ -14,17 +14,16 @@ Multipliers per family:
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Tuple
+from typing import Callable, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import BlockSpec, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.models.attention import attention, decode_attention
 from repro.models.layers import mlp, rmsnorm
 from repro.models.ssm import decode_mamba, mamba_block
-from repro.models.moe import moe_block
 
 UnitProgram = Tuple[str, Callable, Tuple, int]  # (name, fn, abstract_args, k)
 

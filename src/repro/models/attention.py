@@ -122,8 +122,8 @@ def sdpa_chunked(q, k, v, q_pos, k_pos, window, softcap, scale,
     m0 = jnp.full((B, K, H // K, S), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, K, H // K, S), jnp.float32)
     a0 = jnp.zeros((B, K, H // K, S, D), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
-    out = acc / jnp.maximum(l[..., None], 1e-37)
+    (m, lsum, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(lsum[..., None], 1e-37)
     return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D).astype(q.dtype)
 
 

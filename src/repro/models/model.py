@@ -14,10 +14,9 @@ dry-run all program against.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from . import encdec, transformer

@@ -12,8 +12,7 @@ outside the scan and are reused by every application (the Zamba trick).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

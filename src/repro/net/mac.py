@@ -90,3 +90,51 @@ def mac_extra_bytes(mac: MacConfig, nbytes, msgs, active):
         return _tdma_slots(mac, nbytes, active) * mac.slot_bytes - nbytes
     return np.asarray(msgs, float) * np.asarray(active, float) \
         * mac.token_bytes
+
+
+# ---------------------------------------------------------------------------
+# per-packet event costing (used by the repro.sim event-driven engine)
+# ---------------------------------------------------------------------------
+#
+# The aggregate forms above cost a whole (layer, channel) population in
+# closed form.  The event-driven simulator serves the channel one packet
+# at a time, so it needs the *per-transmission* cost: the same protocol
+# constants, charged per packet.
+#
+# - ``ideal``: ``v / B`` — summing over a layer reproduces the aggregate
+#   exactly, so the event engine is bit-compatible with the paper model.
+# - ``tdma``: every packet occupies ``ceil(v / slot)`` whole slots (its
+#   tail slot is padded) plus the guard per slot.  The layer sum is
+#   >= the aggregate form (which pads one tail per *transmitter*, not
+#   per packet) — the event model resolves the padding the analytic
+#   model amortises.
+# - ``token``: each transmission first waits for the circulating token,
+#   ``active`` station hops away — where ``active`` is the number of
+#   stations holding traffic on the channel *at that moment*, which the
+#   event engine tracks as it serves (the analytic form pessimistically
+#   charges the final count for every message).
+
+
+def mac_packet_times(mac: MacConfig, nbytes, active, bw):
+    """Service time of individual transmissions under ``mac``.
+
+    ``nbytes`` are per-packet sizes; ``active`` is the station count
+    seen by each transmission (scalar or array, ignored by ideal/tdma).
+    """
+    nbytes = np.asarray(nbytes, float)
+    if mac.protocol == "ideal":
+        return nbytes / bw
+    if mac.protocol == "tdma":
+        slots = np.ceil(nbytes / mac.slot_bytes)
+        return slots * (mac.slot_bytes / bw + mac.guard_s)
+    return nbytes / bw + np.asarray(active, float) * mac.token_s
+
+
+def mac_packet_extra_bytes(mac: MacConfig, nbytes, active):
+    """Per-transmission non-payload bytes (event-engine energy model)."""
+    nbytes = np.asarray(nbytes, float)
+    if mac.protocol == "ideal":
+        return np.zeros_like(nbytes)
+    if mac.protocol == "tdma":
+        return np.ceil(nbytes / mac.slot_bytes) * mac.slot_bytes - nbytes
+    return np.asarray(active, float) * mac.token_bytes

@@ -64,7 +64,8 @@ class Optimizer(NamedTuple):
 
 def adamw(cfg: OptimizerConfig) -> Optimizer:
     def init(params):
-        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        def zeros(p):
+            return jnp.zeros_like(p, jnp.float32)
         return {"mu": jax.tree.map(zeros, params),
                 "nu": jax.tree.map(zeros, params)}
 

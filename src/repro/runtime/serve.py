@@ -8,7 +8,7 @@ batching scheduler drives it in examples/serve_lm.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ reduction traffic) the compiled step emits — see core/hybrid_schedule.py.
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

@@ -7,8 +7,7 @@ step jits to one XLA program whose collectives the hybrid-plane scheduler
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,94 @@
+"""Vectorized event calendar: per-resource next-free-time arrays.
+
+The event-driven engine advances a frontier (the layer barrier of the
+GEMINI execution model: layer ``l+1``'s packets inject when layer
+``l``'s timeline has fully drained) and serves each resource — a mesh
+cut's striped link bundle, a single directed link, a wireless channel,
+a DRAM port — as a FIFO server with a *next-free-time*.  Because every
+packet of a layer is enqueued at the layer's start, an entire layer's
+worth of events can be popped as ONE batch: per resource, the k-th
+queued transmission completes at ``frontier + cumsum(service)[k]``, so
+a segmented cumulative sum over (resource-sorted) events yields every
+completion time of the batch at once — no per-event heap.
+
+The helpers here are the shared primitives of that batched pop:
+segment-wise cumulative sums, first-occurrence detection (for token-MAC
+active-station counts), and the `ResourcePool` holding the next-free
+and cumulative-busy arrays that per-packet (dynamic-policy) runs mutate
+event by event.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def segment_cumsum(values: np.ndarray, segments: np.ndarray) -> np.ndarray:
+    """Inclusive cumulative sum of ``values`` within runs of ``segments``.
+
+    ``segments`` must be grouped (all equal ids contiguous, e.g. after a
+    stable sort); within each run the original order is the FIFO service
+    order.
+    """
+    values = np.asarray(values, float)
+    if values.size == 0:
+        return values.copy()
+    cs = np.cumsum(values)
+    first = np.ones(len(values), bool)
+    first[1:] = segments[1:] != segments[:-1]
+    starts = np.nonzero(first)[0]
+    # subtract the cumulative total *before* each segment's first entry
+    base = np.repeat(cs[starts] - values[starts],
+                     np.diff(np.append(starts, len(values))))
+    return cs - base
+
+
+def first_occurrence(keys: np.ndarray) -> np.ndarray:
+    """Boolean mask marking the first appearance of each key value."""
+    flags = np.zeros(len(keys), bool)
+    if len(keys):
+        _, idx = np.unique(keys, return_index=True)
+        flags[idx] = True
+    return flags
+
+
+@dataclasses.dataclass
+class ResourcePool:
+    """Next-free-time + busy accounting for one family of resources.
+
+    ``free`` is relative to the current layer frontier (the barrier
+    resets it each layer after folding the elapsed occupancy into
+    ``busy``, the cumulative busy-seconds per resource over the run).
+    """
+
+    free: np.ndarray
+    busy: np.ndarray
+
+    @classmethod
+    def of(cls, n: int) -> "ResourcePool":
+        return cls(np.zeros(n), np.zeros(n))
+
+    def serve(self, ids: np.ndarray, service: np.ndarray) -> float:
+        """Serve one transmission across ``ids`` simultaneously.
+
+        Each listed resource enqueues its share ``service[i]`` (FIFO);
+        the transmission completes when the slowest of them finishes.
+        Returns the completion time (relative to the layer frontier).
+        """
+        self.free[ids] += service
+        return float(self.free[ids].max())
+
+    def peek(self, ids: np.ndarray, service: np.ndarray) -> float:
+        """Completion time `serve` would return, without committing."""
+        return float((self.free[ids] + service).max())
+
+    def horizon(self) -> float:
+        """Latest next-free time — when this pool's queues fully drain."""
+        return float(self.free.max()) if self.free.size else 0.0
+
+    def roll(self) -> None:
+        """Barrier: fold this layer's occupancy into ``busy`` and reset."""
+        self.busy += self.free
+        self.free[:] = 0.0

@@ -1,0 +1,440 @@
+"""Discrete-event, packet-level NoP simulator over a `TrafficTrace`.
+
+The analytic core (`repro.core.simulator`) follows GEMINI: per layer it
+takes the max of aggregate compute/DRAM/NoC/NoP/wireless terms, with
+the wired NoP costed as the most-loaded directed mesh *cut* served at
+the cut's pooled bandwidth.  That form cannot express anything that
+depends on time — queue backlog, burst ordering, or an online policy
+choosing a plane per packet.  This engine re-costs the SAME packetised
+trace (same 64 KiB packets, same XY/YX routes, same link incidence)
+with time-resolved occupancy of every network resource:
+
+- **wired plane** — three link models:
+  - ``striped`` (default): each cut crossing is striped across the
+    cut's k parallel links, the idealized spreading the analytic cut
+    model assumes.  With a static injection set this reproduces the
+    analytic layer times exactly (the fidelity anchor).
+  - ``adaptive``: each crossing picks the least-backlogged parallel
+    link of its cut at injection time (adaptive minimal routing);
+    packet granularity and imbalance emerge.
+  - ``xy``: each crossing uses its fixed dimension-ordered link —
+    the most contended, single-path reality.
+- **wireless plane** — per-channel FIFO servers costed per packet by
+  the MAC protocol (`repro.net.mac.mac_packet_times`): ideal is
+  bit-compatible with the paper's volume/bandwidth aggregate; TDMA
+  pays slot quantisation + guard per packet; token pays an acquisition
+  wait that tracks the *instantaneous* active-station count.
+- **DRAM ports** — ``pooled`` (default) keeps the analytic
+  total-bytes/aggregate-bandwidth term; ``ports`` serves each DRAM
+  module's queue at its own pin rate.
+
+Execution keeps the GEMINI layer barrier: a layer's packets inject at
+its start (in trace order) and the next layer starts when every queue
+has drained — so per-layer event totals are comparable to the analytic
+per-layer maxima, and the analytic value is a lower bound (each cut
+must serve its bytes; pigeonhole puts one link at >= load/k).  Static
+injection sets are served with ONE batched event pop per layer
+(`calendar.pop_layer_batch`); only per-packet online policies walk
+packets one event at a time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.simulator import (BOTTLENECKS, PJ_PER_BIT_DRAM,
+                                  PJ_PER_BIT_NOC, PJ_PER_BIT_NOP_HOP,
+                                  PJ_PER_MAC)
+from repro.core.traffic import TrafficTrace
+from repro.core.wireless import eligibility, wireless_energy_joules
+from repro.net.config import as_network
+from repro.net.mac import mac_packet_extra_bytes, mac_packet_times
+
+from .calendar import ResourcePool, first_occurrence, segment_cumsum
+
+LINK_MODELS = ("striped", "adaptive", "xy")
+DRAM_MODELS = ("pooled", "ports")
+
+
+@dataclasses.dataclass
+class EventResult:
+    """Time-resolved outcome of one event-driven run."""
+
+    total_time: float
+    layer_times: np.ndarray        # (L,) per-layer span
+    layer_finish: np.ndarray       # (L,) event-calendar finish timestamps
+    bottleneck: List[str]
+    injected: np.ndarray           # (M,) final per-packet plane assignment
+    wireless_bytes: float
+    wireless_energy_j: float
+    energy_j: float
+    cut_busy: np.ndarray           # (n_cuts,) wired busy-seconds per cut
+    channel_busy: np.ndarray       # (n_channels,)
+    dram_busy: np.ndarray          # (n_dram,)
+    link_busy: Optional[np.ndarray]  # (n_links,) for the ``xy`` model
+    policy: str
+    link_model: str
+    dram_model: str
+
+    @property
+    def edp(self) -> float:
+        return self.energy_j * self.total_time
+
+    def bottleneck_share(self) -> Dict[str, float]:
+        shares = {b: 0.0 for b in BOTTLENECKS}
+        for t, b in zip(self.layer_times, self.bottleneck):
+            shares[b] += float(t)
+        tot = self.total_time or 1.0
+        return {b: v / tot for b, v in shares.items()}
+
+
+class PacketSim:
+    """Event-driven simulator for one (trace, network) pair.
+
+    Precomputes the per-packet route geometry once; `run` then costs
+    any policy.  ``link_model``/``dram_model`` select the realism level
+    (see module docstring) — the defaults reproduce the analytic model
+    for static injection sets.
+    """
+
+    def __init__(self, trace: TrafficTrace, net, *,
+                 link_model: str = "striped", dram_model: str = "pooled"):
+        if link_model not in LINK_MODELS:
+            raise ValueError(f"link_model must be one of {LINK_MODELS}")
+        if dram_model not in DRAM_MODELS:
+            raise ValueError(f"dram_model must be one of {DRAM_MODELS}")
+        self.trace = trace
+        self.net = as_network(net)
+        self.link_model = link_model
+        self.dram_model = dram_model
+
+        cfg = trace.topo.config
+        self.link_bw = cfg.nop_bw_per_side
+        cut_mat, self.cut_bw = trace.cut_matrix()
+        self.n_cuts = cut_mat.shape[1]
+        assert np.all(cut_mat.sum(axis=1) == 1.0), \
+            "every directed mesh link must belong to exactly one cut"
+        self.cut_of_link = cut_mat.argmax(axis=1)
+        self.k_par = np.rint(self.cut_bw / self.link_bw).astype(int)
+
+        M = len(trace.nbytes)
+        # per-packet route CSR (edges sorted by packet, route order kept)
+        eorder = np.argsort(trace.inc_msg, kind="stable")
+        self._pk_links = trace.inc_link[eorder]
+        self._pk_cuts = self.cut_of_link[self._pk_links]
+        self._pk_starts = np.searchsorted(trace.inc_msg[eorder],
+                                          np.arange(M + 1))
+        self.route_len = np.diff(self._pk_starts)
+        # compacted cut crossings: (packet, cut) -> link multiplicity,
+        # with the striped per-link-bundle service time precomputed
+        key = trace.inc_msg.astype(np.int64) * self.n_cuts + \
+            self.cut_of_link[trace.inc_link]
+        ukey, ucnt = np.unique(key, return_counts=True)
+        self._x_pkt = (ukey // self.n_cuts).astype(np.int64)
+        self._x_cut = (ukey % self.n_cuts).astype(np.int64)
+        self._x_add = ucnt * trace.nbytes[self._x_pkt] \
+            / self.cut_bw[self._x_cut]
+        self._x_starts = np.searchsorted(self._x_pkt, np.arange(M + 1))
+
+        # per-layer packet lists (injection order = trace order)
+        self._lorder = np.argsort(trace.layer, kind="stable")
+        self._l_starts = np.searchsorted(trace.layer[self._lorder],
+                                         np.arange(trace.n_layers + 1))
+
+        # wireless plane
+        plan = self.net.channels
+        self.n_channels = plan.n_channels
+        self.ch_of_node = plan.assign(trace.topo.n_nodes)
+        self.pkt_ch = self.ch_of_node[trace.src]
+        self.bw_c = plan.channel_bandwidth(self.net.bandwidth)
+
+        # DRAM ports
+        self.n_dram = max(1, len(trace.topo.dram_coords))
+        self.port_bw = cfg.dram_bw_per_chiplet
+        self._dram_svc = np.where(trace.dram_node >= 0,
+                                  trace.nbytes / self.port_bw, 0.0)
+
+        self.eligible = eligibility(trace, 1)   # online-policy candidacy
+        self.t_rest = np.maximum.reduce(
+            [trace.t_compute, trace.t_dram, trace.t_noc])
+        self._elig_cache: Dict[int, np.ndarray] = {1: self.eligible}
+        self._wired_cache: Optional[EventResult] = None
+
+    # ------------------------------------------------------------------
+    # shared pieces
+    # ------------------------------------------------------------------
+
+    def elig(self, threshold: int) -> np.ndarray:
+        """Paper eligibility mask (criteria 1+2) at ``threshold``."""
+        if threshold not in self._elig_cache:
+            self._elig_cache[threshold] = eligibility(self.trace, threshold)
+        return self._elig_cache[threshold]
+
+    def _wireless_batch(self, injected: np.ndarray):
+        """Per-packet wireless service/extra-bytes for a whole mask.
+
+        Packets on one channel are served FIFO in trace order; the
+        token MAC's acquisition wait uses the station count active *at
+        serve time* (first-occurrence cumsum within each (layer,
+        channel) queue).
+        """
+        tr, mac = self.trace, self.net.mac
+        idx = np.nonzero(injected)[0]           # trace (= injection) order
+        v = tr.nbytes[idx]
+        grp = tr.layer[idx].astype(np.int64) * self.n_channels \
+            + self.pkt_ch[idx]
+        order = np.argsort(grp, kind="stable")
+        a_now = np.empty(len(idx))
+        pairs = grp[order] * tr.topo.n_nodes + tr.src[idx][order]
+        a_now[order] = segment_cumsum(first_occurrence(pairs), grp[order])
+        svc = mac_packet_times(mac, v, a_now, self.bw_c)
+        extra = mac_packet_extra_bytes(mac, v, a_now)
+        return idx, grp, np.asarray(svc, float), float(np.sum(extra))
+
+    def _dram_terms(self, busy_ld: np.ndarray) -> np.ndarray:
+        if self.dram_model == "ports":
+            return busy_ld.max(axis=1)
+        return self.trace.t_dram
+
+    def _finish(self, mask: np.ndarray, t_nop: np.ndarray,
+                t_wl: np.ndarray, t_dram: np.ndarray, extra_bytes: float,
+                busies, policy_name: str) -> EventResult:
+        tr = self.trace
+        stack = np.stack([tr.t_compute, t_dram, tr.t_noc, t_nop, t_wl])
+        layer_times = stack.max(axis=0)
+        which = stack.argmax(axis=0)
+        wl_bytes = float(tr.nbytes[mask].sum())
+        # platform energy: same per-bit constants as the analytic model;
+        # wired NoP bits = bytes x traversed links, route-exact
+        byte_links = float((tr.nbytes * self.route_len)[~mask].sum())
+        energy = (tr.total_macs * PJ_PER_MAC
+                  + float(tr.dram_bytes.sum()) * 8 * PJ_PER_BIT_DRAM
+                  + tr.noc_bytes * 8 * PJ_PER_BIT_NOC
+                  + byte_links * 8 * PJ_PER_BIT_NOP_HOP
+                  + (wl_bytes + extra_bytes) * 8
+                  * self.net.energy_pj_per_bit) * 1e-12
+        cut_busy, channel_busy, dram_busy, link_busy = busies
+        return EventResult(
+            total_time=float(layer_times.sum()),
+            layer_times=layer_times,
+            layer_finish=np.cumsum(layer_times),
+            bottleneck=[BOTTLENECKS[i] for i in which],
+            injected=mask,
+            wireless_bytes=wl_bytes,
+            wireless_energy_j=wireless_energy_joules(tr, mask, self.net,
+                                                     extra_bytes),
+            energy_j=energy,
+            cut_busy=cut_busy, channel_busy=channel_busy,
+            dram_busy=dram_busy, link_busy=link_busy,
+            policy=policy_name, link_model=self.link_model,
+            dram_model=self.dram_model)
+
+    # ------------------------------------------------------------------
+    # batched path: static injection sets, one event pop per layer
+    # ------------------------------------------------------------------
+
+    def _planned_parts(self, mask: np.ndarray):
+        """Vectorized per-layer network terms for a fixed injection set."""
+        tr = self.trace
+        L = tr.n_layers
+        # "adaptive" is served per event (`_run_online`); as a *planning*
+        # projection it uses the striped (idealized) wired plane below
+        if self.link_model != "xy":
+            keep = ~mask[self._x_pkt]
+            seg = tr.layer[self._x_pkt[keep]].astype(np.int64) * self.n_cuts \
+                + self._x_cut[keep]
+            busy = np.bincount(seg, weights=self._x_add[keep],
+                               minlength=L * self.n_cuts) \
+                .reshape(L, self.n_cuts)
+            t_nop = busy.max(axis=1)
+            cut_busy, link_busy = busy.sum(axis=0), None
+        else:  # "xy": fixed dimension-ordered links
+            epk = tr.inc_msg
+            keep = ~mask[epk]
+            seg = tr.layer[epk[keep]].astype(np.int64) * tr.n_links \
+                + tr.inc_link[keep]
+            busy = np.bincount(seg, weights=tr.nbytes[epk[keep]]
+                               / self.link_bw,
+                               minlength=L * tr.n_links) \
+                .reshape(L, tr.n_links)
+            t_nop = busy.max(axis=1)
+            link_busy = busy.sum(axis=0)
+            cut_busy = np.bincount(self.cut_of_link, weights=link_busy,
+                                   minlength=self.n_cuts)
+        _, grp, svc, extra = self._wireless_batch(mask)
+        busy_wl = np.bincount(grp, weights=svc,
+                              minlength=L * self.n_channels) \
+            .reshape(L, self.n_channels)
+        t_wl = busy_wl.max(axis=1)
+        nd = tr.dram_node
+        busy_ld = np.bincount(
+            tr.layer[nd >= 0].astype(np.int64) * self.n_dram + nd[nd >= 0],
+            weights=self._dram_svc[nd >= 0],
+            minlength=L * self.n_dram).reshape(L, self.n_dram)
+        busies = (cut_busy, busy_wl.sum(axis=0), busy_ld.sum(axis=0),
+                  link_busy)
+        return t_nop, t_wl, self._dram_terms(busy_ld), extra, busies
+
+    def layer_times(self, mask: np.ndarray) -> np.ndarray:
+        """Per-layer event times a fixed injection set would produce.
+
+        Exact for the batched link models; the ``adaptive`` model uses
+        the striped projection (policies plan on the idealized wired
+        plane, the event run resolves the real one).
+        """
+        t_nop, t_wl, t_dram, _, _ = self._planned_parts(mask)
+        return np.maximum.reduce(
+            [self.trace.t_compute, t_dram, self.trace.t_noc, t_nop, t_wl])
+
+    def _run_planned(self, mask: np.ndarray, name: str) -> EventResult:
+        t_nop, t_wl, t_dram, extra, busies = self._planned_parts(mask)
+        return self._finish(mask, t_nop, t_wl, t_dram, extra, busies, name)
+
+    # ------------------------------------------------------------------
+    # sequential path: per-packet events (online policies / adaptive links)
+    # ------------------------------------------------------------------
+
+    def _run_online(self, policy, mask: Optional[np.ndarray],
+                    name: str) -> EventResult:
+        tr, mac = self.trace, self.net.mac
+        L, M = tr.n_layers, len(tr.nbytes)
+        adaptive = self.link_model == "adaptive"
+        xy = self.link_model == "xy"
+        k_max = int(self.k_par.max()) if self.n_cuts else 1
+        # physical parallel links of each cut (inf-padded, adaptive model)
+        pad = np.zeros((self.n_cuts, k_max))
+        pad[np.arange(k_max)[None, :] >= self.k_par[:, None]] = np.inf
+
+        injected = np.zeros(M, bool)
+        t_nop = np.zeros(L)
+        t_wl = np.zeros(L)
+        busy_ld = np.zeros((L, self.n_dram))
+        cut_busy = np.zeros(self.n_cuts)
+        extra_bytes = 0.0
+
+        # per-resource next-free-time pools (barrier-rolled per layer);
+        # the adaptive model keeps a raw (cut, parallel-slot) matrix so
+        # the inf-padding of short cuts stays out of the busy accounting
+        wired_pool = ResourcePool.of(tr.n_links if xy else self.n_cuts)
+        ch_pool = ResourcePool.of(self.n_channels)
+        dram_pool = ResourcePool.of(self.n_dram)
+
+        for li in range(L):
+            pkts = self._lorder[self._l_starts[li]:self._l_starts[li + 1]]
+            linkmat = pad.copy() if adaptive else None
+            ch_srcs = [set() for _ in range(self.n_channels)]
+            for p in pkts:
+                v = tr.nbytes[p]
+                nd = tr.dram_node[p]
+                if nd >= 0:
+                    dram_pool.serve(np.array([nd]),
+                                    np.array([self._dram_svc[p]]))
+                # --- wired projection (uncommitted) ---
+                if adaptive:
+                    cuts = self._pk_cuts[self._pk_starts[p]:
+                                         self._pk_starts[p + 1]]
+                    s = v / self.link_bw
+                    trial = linkmat.copy()
+                    proj_w = 0.0
+                    for c in cuts:     # each crossing -> least-busy link
+                        j = int(trial[c].argmin())
+                        trial[c, j] += s
+                        proj_w = max(proj_w, trial[c, j])
+                elif xy:
+                    ids = self._pk_links[self._pk_starts[p]:
+                                         self._pk_starts[p + 1]]
+                    svc = np.full(len(ids), v / self.link_bw)
+                    proj_w = wired_pool.peek(ids, svc) if len(ids) else 0.0
+                else:
+                    xs = slice(self._x_starts[p], self._x_starts[p + 1])
+                    ids, svc = self._x_cut[xs], self._x_add[xs]
+                    proj_w = wired_pool.peek(ids, svc) if len(ids) else 0.0
+                # --- wireless projection + decision ---
+                go = False
+                if self.eligible[p]:
+                    ch = int(self.pkt_ch[p])
+                    a_now = len(ch_srcs[ch] | {int(tr.src[p])})
+                    s_wl = float(mac_packet_times(mac, v, a_now, self.bw_c))
+                    proj_wl = ch_pool.peek(np.array([ch]),
+                                           np.array([s_wl]))
+                    if mask is not None:
+                        go = bool(mask[p])
+                    else:
+                        go = policy.decide(self, li, p, proj_w, proj_wl,
+                                           float(self.t_rest[li]))
+                elif mask is not None and mask[p]:
+                    raise ValueError("injection mask selects an ineligible "
+                                     "packet")
+                # --- commit ---
+                if go:
+                    injected[p] = True
+                    ch_pool.serve(np.array([ch]), np.array([s_wl]))
+                    ch_srcs[ch].add(int(tr.src[p]))
+                    extra_bytes += float(mac_packet_extra_bytes(mac, v,
+                                                                a_now))
+                elif adaptive:
+                    linkmat = trial
+                elif len(ids):
+                    wired_pool.serve(ids, svc)
+            # --- layer barrier: drain every queue, roll busy ---
+            if adaptive:
+                fin = np.where(np.isfinite(linkmat), linkmat, 0.0)
+                t_nop[li] = fin.max() if fin.size else 0.0
+                cut_busy += fin.sum(axis=1)
+            else:
+                t_nop[li] = wired_pool.horizon()
+                wired_pool.roll()
+            t_wl[li] = ch_pool.horizon()
+            ch_pool.roll()
+            busy_ld[li] = dram_pool.free
+            dram_pool.roll()
+
+        if xy:
+            link_busy = wired_pool.busy
+            cut_busy = np.bincount(self.cut_of_link, weights=link_busy,
+                                   minlength=self.n_cuts)
+        elif not adaptive:
+            cut_busy, link_busy = wired_pool.busy, None
+        else:
+            link_busy = None
+        busies = (cut_busy, ch_pool.busy, busy_ld.sum(axis=0), link_busy)
+        return self._finish(injected, t_nop, t_wl, self._dram_terms(busy_ld),
+                            extra_bytes, busies, name)
+
+    # ------------------------------------------------------------------
+    # entry points
+    # ------------------------------------------------------------------
+
+    def run(self, policy="static") -> EventResult:
+        """Simulate under ``policy`` (name, or a `policies.Policy`)."""
+        from .policies import get_policy
+        pol = get_policy(policy)
+        mask = pol.plan_trace(self)
+        if mask is not None:
+            mask = np.asarray(mask, bool)
+            if self.link_model != "adaptive":
+                return self._run_planned(mask, pol.name)
+            return self._run_online(pol, mask, pol.name)
+        return self._run_online(pol, None, pol.name)
+
+    def run_wired(self) -> EventResult:
+        """All-wired baseline (the speedup denominator), cached."""
+        if self._wired_cache is None:
+            mask = np.zeros(len(self.trace.nbytes), bool)
+            if self.link_model != "adaptive":
+                self._wired_cache = self._run_planned(mask, "wired")
+            else:
+                self._wired_cache = self._run_online(None, mask, "wired")
+        return self._wired_cache
+
+    def speedup(self, policy="static") -> float:
+        return self.run_wired().total_time / self.run(policy).total_time
+
+
+def simulate_events(trace: TrafficTrace, net, policy="static",
+                    **kwargs) -> EventResult:
+    """One-shot convenience: `PacketSim(trace, net, **kwargs).run(policy)`."""
+    return PacketSim(trace, net, **kwargs).run(policy)

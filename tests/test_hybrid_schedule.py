@@ -10,7 +10,7 @@ except ImportError:  # offline container: deterministic smoke-subset fallback
 from repro.core.hybrid_schedule import (PlaneConfig, balance_cell,
                                         flows_from_coll_per_op,
                                         schedule_cell, sweep_cell,
-                                        wired_time, eligible_volume)
+                                        eligible_volume)
 
 
 COLL = {"all-gather": 4e9, "all-reduce": 8e9, "reduce-scatter": 2e9,

@@ -126,16 +126,16 @@ def test_nearest_dram_is_nearest():
 @pytest.mark.parametrize("wl", ["resnet50", "densenet", "transformer"])
 def test_workload_graph_consistency(wl):
     layers = get_workload(wl)
-    for i, l in enumerate(layers):
-        for c in l.consumers:
+    for i, lyr in enumerate(layers):
+        for c in lyr.consumers:
             assert i < c < len(layers), (wl, i, c)
-        assert l.macs >= 0 and l.act_out >= 0
+        assert lyr.macs >= 0 and lyr.act_out >= 0
 
 
 def test_all_workloads_have_positive_work():
     for wl in WORKLOADS:
         layers = get_workload(wl)
-        assert sum(l.macs for l in layers) > 0, wl
+        assert sum(lyr.macs for lyr in layers) > 0, wl
 
 
 @given(st.sampled_from(["resnet50", "googlenet", "zfnet"]))

@@ -4,14 +4,12 @@ S7 relies on."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import make_auto_mesh, use_mesh
-from repro.launch.roofline import (CollectiveStats, Roofline,
-                                   collective_bytes, cost_analysis,
-                                   _type_bytes, extract)
+from repro.launch.roofline import (Roofline, collective_bytes,
+                                   cost_analysis, _type_bytes)
 
 
 def test_type_bytes():

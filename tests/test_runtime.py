@@ -1,8 +1,6 @@
 """Runtime substrate tests: optimizers, compression, data pipeline,
 sharding rules — including hypothesis property tests on the invariants."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

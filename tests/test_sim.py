@@ -1,0 +1,286 @@
+"""The event-driven packet-level simulator (repro.sim).
+
+Covers the PR's acceptance properties:
+- a golden hand-computed 2-chiplet / 3-packet trace, checked event by
+  event against pencil-and-paper numbers (batched and per-packet paths);
+- the default (striped, ideal-MAC, single-channel) engine reproduces
+  the analytic model's layer times exactly, and its hybrid speedup is
+  within 5% of the analytic speedup on EVERY paper workload;
+- the event-driven total time dominates the analytic per-layer lower
+  bound on every workload and link model, with equality when a
+  non-network term (compute) is the bottleneck everywhere;
+- the adaptive per-layer policy matches or beats the best static
+  (threshold x injection) grid point on every workload; greedy never
+  slows a run down; the oracle replay agrees with the offline balancer;
+- per-packet MAC variants and the per-port DRAM model only ever add
+  time, and bytes are conserved across planes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (AcceleratorConfig, NetworkConfig, balance,
+                        build_topology, make_trace, simulate_hybrid,
+                        simulate_wired)
+from repro.core.dse import batched_design_space, policy_sweep
+from repro.core.traffic import TrafficTrace
+from repro.core.workloads import WORKLOADS
+from repro.net.batched import GridSpec
+from repro.net.mac import MacConfig
+from repro.sim import (FixedPolicy, PacketSim, get_policy,
+                       simulate_events)
+
+NET96 = NetworkConfig(bandwidth=96e9 / 8)
+
+
+@pytest.fixture(scope="module")
+def traces_all():
+    return {wl: make_trace(wl) for wl in WORKLOADS}
+
+
+@pytest.fixture(scope="module")
+def trace(traces_all):
+    return traces_all["zfnet"]
+
+
+# ---------------------------------------------------------------------------
+# golden trace: 2 chiplets, 1 layer, 3 packets, numbers done by hand
+# ---------------------------------------------------------------------------
+
+def _golden_trace() -> TrafficTrace:
+    """Two chiplets side by side, one directed link each way.
+
+    Link bandwidth 4 GB/s (32 Gb/s); both cuts have one parallel link,
+    so every link model agrees.  Three packets in layer 0:
+
+    - p0: 4 MB multicast chiplet0 -> chiplet1 (link 0), eligible
+    - p1: 4 MB multicast chiplet0 -> chiplet1 (link 0), eligible
+    - p2: 2 MB unicast   chiplet1 -> chiplet0 (link 1), 1 hop: not
+      eligible (the paper's distance threshold is exclusive for
+      unicasts)
+
+    Compute floor 1 ms; DRAM and NoC free.
+    """
+    topo = build_topology(AcceleratorConfig(grid=(1, 2), n_dram=1))
+    return TrafficTrace(
+        topo=topo, n_layers=1,
+        link_index={((0, 0), (0, 1)): 0, ((0, 1), (0, 0)): 1},
+        layer=np.array([0, 0, 0], np.int32),
+        nbytes=np.array([4e6, 4e6, 2e6]),
+        src=np.array([0, 0, 1], np.int32),
+        is_multicast=np.array([True, True, False]),
+        is_multichip=np.array([True, True, True]),
+        max_hops=np.array([1, 1, 1], np.int32),
+        dram_node=np.array([-1, -1, -1], np.int32),
+        inc_msg=np.array([0, 1, 2], np.int32),
+        inc_link=np.array([0, 0, 1], np.int32),
+        t_compute=np.array([1e-3]),
+        t_dram=np.array([0.0]),
+        t_noc=np.array([0.0]),
+        dram_bytes=np.array([0.0]),
+        messages=[],
+    )
+
+
+def test_golden_wired_baseline():
+    tr = _golden_trace()
+    sim = PacketSim(tr, NET96)
+    res = sim.run_wired()
+    # link 0 serves 8 MB at 4 GB/s -> 2 ms; compute floor is 1 ms
+    assert res.total_time == pytest.approx(2e-3)
+    assert res.bottleneck == ["nop"]
+    np.testing.assert_allclose(res.cut_busy, [2e-3, 0.5e-3])
+    assert res.wireless_bytes == 0.0
+
+
+def test_golden_fixed_injection():
+    tr = _golden_trace()
+    sim = PacketSim(tr, NET96)
+    res = sim.run(FixedPolicy([False, True, False]))
+    # p1 offloaded: link 0 now 4 MB -> 1 ms; wireless 4 MB at 12 GB/s
+    # -> 1/3 ms; the 1 ms compute floor ties the wired plane and wins
+    # the argmax
+    assert res.total_time == pytest.approx(1e-3)
+    assert res.bottleneck == ["compute"]
+    assert res.wireless_bytes == pytest.approx(4e6)
+    np.testing.assert_allclose(res.channel_busy, [4e6 / (96e9 / 8)])
+
+
+def test_golden_greedy_event_by_event():
+    """Per-packet trace of the greedy decisions, done by hand:
+
+    - p0: wired finish 0+1 ms vs wireless 1/3 ms -> wireless
+    - p1: wired finish 0+1 ms vs wireless 2/3 ms -> wireless
+    - p2: ineligible -> wired (0.5 ms on link 1)
+    layer = max(1 ms floor, 0.5 ms wired, 2/3 ms wireless) = 1 ms.
+    """
+    tr = _golden_trace()
+    sim = PacketSim(tr, NET96)
+    res = sim.run("greedy")
+    assert list(res.injected) == [True, True, False]
+    assert res.total_time == pytest.approx(1e-3)
+    np.testing.assert_allclose(res.channel_busy, [8e6 / (96e9 / 8)])
+    np.testing.assert_allclose(res.cut_busy, [0.0, 0.5e-3])
+    # adaptive per-layer planning finds the same optimum
+    assert sim.run("adaptive").total_time == pytest.approx(1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fidelity: the default engine reproduces the analytic model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wl", ["zfnet", "transformer", "resnet50"])
+def test_striped_static_matches_analytic_exactly(traces_all, wl):
+    tr = traces_all[wl]
+    ev = simulate_events(tr, NET96, policy="static")
+    an = simulate_hybrid(tr, NET96)
+    np.testing.assert_allclose(ev.layer_times, an.layer_times, rtol=1e-12)
+    assert ev.bottleneck == an.bottleneck
+    assert ev.wireless_bytes == pytest.approx(an.wireless_bytes)
+    evw = PacketSim(tr, NET96).run_wired()
+    anw = simulate_wired(tr)
+    np.testing.assert_allclose(evw.layer_times, anw.layer_times, rtol=1e-12)
+
+
+def test_event_speedup_within_5pct_of_analytic_everywhere(traces_all):
+    """Acceptance: event-driven hybrid speedup within 5% of analytic on
+    the ideal-MAC single-channel config, for every paper workload."""
+    for wl, tr in traces_all.items():
+        an = simulate_wired(tr).total_time / \
+            simulate_hybrid(tr, NET96).total_time
+        sim = PacketSim(tr, NET96)
+        ev = sim.run_wired().total_time / sim.run("static").total_time
+        assert abs(ev - an) / an < 0.05, wl
+        # the default (striped) model is in fact exact
+        assert abs(ev - an) / an < 1e-9, wl
+
+
+# ---------------------------------------------------------------------------
+# property: event time >= analytic per-layer lower bound
+# ---------------------------------------------------------------------------
+
+def test_event_time_dominates_analytic_lower_bound(traces_all):
+    """The analytic layer time is a lower bound under every link model:
+    each mesh cut must serve its bytes, and pigeonhole puts at least
+    one of its k links at >= load/k."""
+    for wl, tr in traces_all.items():
+        an = simulate_hybrid(tr, NET96).total_time
+        for model in ("striped", "adaptive", "xy"):
+            ev = PacketSim(tr, NET96, link_model=model).run("static")
+            assert ev.total_time >= an * (1 - 1e-9), (wl, model)
+
+
+def test_event_equals_analytic_when_compute_bound():
+    """With compute 10^4x slower, every layer with any work at all is
+    compute-bound, and the event-driven total collapses to the analytic
+    sum exactly on every link model (no network term can surface)."""
+    tr = make_trace("zfnet", AcceleratorConfig(tops_total=144e8))
+    an = simulate_hybrid(tr, NET96)
+    assert an.total_time == pytest.approx(float(tr.t_compute.sum()))
+    for model in ("striped", "adaptive", "xy"):
+        ev = PacketSim(tr, NET96, link_model=model).run("static")
+        assert ev.total_time == pytest.approx(an.total_time), model
+        assert set(ev.bottleneck) == {"compute"}
+
+
+def test_event_equals_analytic_layerwise_when_non_network_dominates(
+        traces_all):
+    """Whenever the event engine reports a non-network bottleneck for a
+    layer, its layer time equals the analytic one exactly: the floors
+    are shared, and the event network terms it beat dominate the
+    analytic ones."""
+    for wl in ("transformer_cell", "resnet50"):
+        tr = traces_all[wl]
+        an = simulate_hybrid(tr, NET96)
+        for model in ("striped", "xy"):
+            ev = PacketSim(tr, NET96, link_model=model).run("static")
+            mask = np.array([b in ("compute", "dram", "noc")
+                             for b in ev.bottleneck])
+            assert mask.any(), (wl, model)
+            np.testing.assert_allclose(ev.layer_times[mask],
+                                       an.layer_times[mask], rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+def _grid_best(tr, net=NET96) -> float:
+    bw = int(round(net.bandwidth * 8 / 1e9))
+    spec = GridSpec(bandwidths_gbps=(bw,), macs=(net.mac,),
+                    plans=(net.channels,))
+    return float(batched_design_space(tr).evaluate(spec).speedup.max())
+
+
+def test_adaptive_policy_beats_every_static_grid_point(traces_all):
+    """Acceptance: a dynamic policy matches or beats the best static
+    (threshold x injection) grid point on every paper workload."""
+    for wl, tr in traces_all.items():
+        sim = PacketSim(tr, NET96)
+        assert sim.speedup("adaptive") >= _grid_best(tr) - 1e-9, wl
+
+
+def test_greedy_never_slows_down(traces_all):
+    """Join-shortest-plane injects only below the wired backlog, so no
+    layer can end later than all-wired."""
+    for wl, tr in traces_all.items():
+        assert PacketSim(tr, NET96).speedup("greedy") >= 1 - 1e-12, wl
+
+
+def test_oracle_replay_matches_balancer(trace):
+    b = balance(trace, NET96)
+    ev = PacketSim(trace, NET96).run("oracle")
+    assert np.array_equal(ev.injected, b.injected)
+    assert ev.total_time == pytest.approx(b.sim.total_time)
+
+
+def test_online_and_batched_paths_agree(trace):
+    """Replaying an online run's injection set through the batched
+    per-layer pop reproduces it exactly (busy totals are independent of
+    the serving path)."""
+    sim = PacketSim(trace, NET96)
+    online = sim.run("greedy")
+    replay = sim.run(FixedPolicy(online.injected))
+    np.testing.assert_allclose(replay.layer_times, online.layer_times,
+                               rtol=1e-12)
+    np.testing.assert_allclose(replay.cut_busy, online.cut_busy)
+    np.testing.assert_allclose(replay.channel_busy, online.channel_busy)
+
+
+def test_policy_registry_and_sweep(trace):
+    assert get_policy("greedy").name == "greedy"
+    with pytest.raises(ValueError):
+        get_policy("nope")
+    ps = policy_sweep(trace, "zfnet")
+    assert set(ps.policy_speedups) == {"static", "greedy", "adaptive",
+                                       "oracle"}
+    assert ps.policy_speedups["adaptive"] >= ps.grid_best_speedup - 1e-9
+    name, sp = ps.best_policy()
+    assert sp == max(ps.policy_speedups.values())
+
+
+# ---------------------------------------------------------------------------
+# realism knobs: per-packet MACs, per-port DRAM
+# ---------------------------------------------------------------------------
+
+def test_event_mac_variants_only_add_time(trace):
+    ideal = PacketSim(trace, NET96).run("static")
+    total = float(trace.nbytes.sum())
+    for proto in ("tdma", "token"):
+        net = NetworkConfig(96e9 / 8, mac=MacConfig(proto))
+        res = PacketSim(trace, net).run("static")
+        assert res.total_time >= ideal.total_time - 1e-15, proto
+        assert res.wireless_energy_j >= ideal.wireless_energy_j, proto
+        # bytes conserved across planes
+        wired = float(trace.nbytes[~res.injected].sum())
+        assert wired + res.wireless_bytes == pytest.approx(total)
+
+
+def test_dram_ports_model_dominates_pooled(trace):
+    pooled = PacketSim(trace, NET96).run("static")
+    ports = PacketSim(trace, NET96, dram_model="ports").run("static")
+    assert ports.total_time >= pooled.total_time - 1e-15
+    # every DRAM byte is accounted on some port at the pin rate
+    cfg = trace.topo.config
+    expect = float(trace.dram_bytes.sum()) / cfg.dram_bw_per_chiplet
+    assert float(ports.dram_busy.sum()) == pytest.approx(expect)
