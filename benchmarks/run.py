@@ -60,6 +60,13 @@ def main() -> None:
              r["_summary"]["adaptive"]["beats_grid"],
              r["_summary"]["greedy"]["beats_grid"],
              100 * (r["_summary"]["adaptive"]["mean_speedup"] - 1))),
+        ("llm_collectives",
+         paper_figs.fig_llm_collectives,
+         lambda r: "prefill_mean96=%.1f%%;decode_mean96=%.1f%%;"
+         "prefill_coll_share=%.2f" % (
+             100 * (r["_summary_prefill"]["mean_best_96"] - 1),
+             100 * (r["_summary_decode"]["mean_best_96"] - 1),
+             r["_summary_prefill"]["mean_collective_share"])),
         ("balancer_vs_sweep",
          lambda: paper_figs.balancer_vs_sweep(traces),
          lambda r: "balancer_wins=%d/%d" % (

@@ -3,22 +3,30 @@ wireless DSE, the Fig. 5 heatmap, the beyond-paper network sweep (MAC
 protocols x channel plans) and the analytic balancer — on the 144-TOPS
 3x3-chiplet platform of Table 1.
 
-    PYTHONPATH=src python examples/wireless_dse.py [workload]
+Accepts the paper's 15 workloads AND the LLM frontier names
+("<model>:<phase>", e.g. mixtral_8x22b:prefill — tensor-/expert-
+parallel mappings with collective traffic).  ``--quick`` trims the
+per-point heatmap for CI smoke runs.
+
+    PYTHONPATH=src python examples/wireless_dse.py [workload] [--quick]
 """
 
 import sys
 
-from repro.core import (ChannelPlan, MacConfig, NetworkConfig,
-                        WirelessConfig, balance, make_trace, network_sweep,
-                        policy_sweep, simulate_wired, sweep)
+from repro.core import (ChannelPlan, LLM_WORKLOADS, MacConfig,
+                        NetworkConfig, WirelessConfig, balance, make_trace,
+                        network_sweep, policy_sweep, simulate_wired, sweep)
 from repro.core.dse import INJECTIONS, THRESHOLDS
 from repro.core.simulator import simulate_hybrid
 from repro.core.workloads import WORKLOADS
 
 
 def main():
-    wl = sys.argv[1] if len(sys.argv) > 1 else "zfnet"
-    assert wl in WORKLOADS, f"pick one of {list(WORKLOADS)}"
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    quick = "--quick" in sys.argv[1:]
+    wl = args[0] if args else "zfnet"
+    assert wl in WORKLOADS or wl in LLM_WORKLOADS, \
+        f"pick one of {list(WORKLOADS)} or {list(LLM_WORKLOADS)}"
     tr = make_trace(wl)
 
     base = simulate_wired(tr)
@@ -27,6 +35,13 @@ def main():
     print("bottleneck shares:",
           {k: f"{v:.0%}" for k, v in base.bottleneck_share().items()
            if v > 0.005})
+    coll = sum(m.nbytes for m in tr.messages if m.kind == "coll")
+    if coll:
+        total = sum(m.nbytes for m in tr.messages)
+        mcast = sum(m.nbytes for m in tr.messages
+                    if m.kind == "coll" and len(m.dsts) > 1)
+        print(f"collective traffic: {coll/total:.0%} of NoP bytes "
+              f"({mcast/total:.0%} broadcast-natured multicast)")
 
     for bw in (64, 96):
         r = sweep(tr, wl, bw)
@@ -35,13 +50,17 @@ def main():
               f"(threshold={r.best_threshold}, "
               f"injection={r.best_injection}) ==")
 
+    # --quick (CI smoke): a 2x3 corner of the per-point heatmap instead
+    # of the full 4x15 grid — every code path, a fraction of the calls
+    thresholds = THRESHOLDS[:2] if quick else THRESHOLDS
+    injections = INJECTIONS[::5] if quick else INJECTIONS
     print("\nthreshold x injection heatmap (% speedup, 96 Gb/s):")
     b = base.total_time
-    header = "thr\\p " + " ".join(f"{p:5.2f}" for p in INJECTIONS)
+    header = "thr\\p " + " ".join(f"{p:5.2f}" for p in injections)
     print(header)
-    for thr in THRESHOLDS:
+    for thr in thresholds:
         row = []
-        for p in INJECTIONS:
+        for p in injections:
             h = simulate_hybrid(tr, WirelessConfig(96e9 / 8, thr, p))
             row.append(100 * (b / h.total_time - 1))
         print(f"  {thr}   " + " ".join(f"{v:5.1f}" for v in row))

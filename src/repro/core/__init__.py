@@ -18,6 +18,10 @@ from .dse import (sweep, sweep_all, summary, SweepResult,
                   NetworkSweepResult, batched_design_space,
                   policy_sweep, policy_sweep_all, PolicySweepResult)
 from .balancer import balance, BalancerResult
+from .collectives import CollectiveSpec, collective_bytes
+from .mapper import (Mapping, expert_parallel_mapping, pipeline_mapping,
+                     spatial_mapping, tensor_parallel_mapping)
+from .workloads_llm import LLM_WORKLOADS, make_llm_trace
 
 # `repro.sim` (the event-driven engine) is re-exported lazily (PEP 562):
 # it imports `repro.core` submodules, so an eager import here would make
@@ -48,5 +52,9 @@ __all__ = [
     "NetworkSweepResult", "batched_design_space",
     "policy_sweep", "policy_sweep_all", "PolicySweepResult",
     "balance", "BalancerResult",
+    "CollectiveSpec", "collective_bytes",
+    "Mapping", "pipeline_mapping", "spatial_mapping",
+    "tensor_parallel_mapping", "expert_parallel_mapping",
+    "LLM_WORKLOADS", "make_llm_trace",
     *_SIM_EXPORTS,
 ]

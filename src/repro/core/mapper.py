@@ -21,21 +21,29 @@ generator (`traffic.py`) turns mapping + graph into messages.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Sequence, TYPE_CHECKING
 
 import numpy as np
 
 from .topology import Topology
 from .workloads import Layer
 
+if TYPE_CHECKING:   # runtime import stays in-function: collectives ->
+    from .collectives import CollectiveSpec   # traffic -> mapper cycle
+
 
 @dataclasses.dataclass
 class Mapping:
-    """Per-layer chiplet placement."""
+    """Per-layer chiplet placement (+ the collectives it requires)."""
 
     chiplets: List[Sequence[int]]      # chiplet ids executing each layer
     shares: List[np.ndarray]           # fraction of the layer per chiplet
     spill_window: int = 4              # program-order distance before DRAM spill
+    # collective phases the mapping emits at layer boundaries
+    # (tensor-parallel all-reduces, MoE all-to-alls, ...); lowered to
+    # messages by `traffic.generate_messages` via `collectives.lower`
+    collectives: List["CollectiveSpec"] = dataclasses.field(
+        default_factory=list)
 
     def share_of(self, layer: int, chiplet: int) -> float:
         seq = list(self.chiplets[layer])
@@ -115,11 +123,15 @@ def pipeline_mapping(layers: List[Layer], topo: Topology,
                    key=lambda i: layers[i - 1].act_out)
         for i in range(min(b, best), max(b, best)):
             stage_of[i] = s if best < b else s - 1
-    # every stage owns an equal contiguous chiplet group (all chiplets are
-    # used even when the pipeline is shallow)
-    k = n // n_stages
-    groups = [tuple(order[s * k:(s + 1) * k]) or (order[0],)
-              for s in range(n_stages)]
+    # every stage owns a contiguous chiplet group; when stages don't divide
+    # the array the first n % n_stages stages take one extra chiplet, so
+    # ALL chiplets are used (the trailing remainder used to sit idle)
+    k, rem = divmod(n, n_stages)
+    sizes = [k + (s < rem) for s in range(n_stages)]
+    starts = [0]
+    for sz in sizes:
+        starts.append(starts[-1] + sz)
+    groups = [tuple(order[starts[s]:starts[s + 1]]) for s in range(n_stages)]
     chiplets: List[Sequence[int]] = [groups[s] for s in stage_of]
     shares = [np.full((len(groups[s]),), 1.0 / len(groups[s]))
               for s in stage_of]
@@ -130,11 +142,106 @@ def pipeline_mapping(layers: List[Layer], topo: Topology,
     for i, lyr in enumerate(layers):
         if lyr.weights > WEIGHT_SRAM_BYTES:
             need = int(np.ceil(lyr.weights / WEIGHT_SRAM_BYTES))
-            w = k
+            w = sizes[stage_of[i]]
             while w < min(need, n):
-                w += k
+                w += max(1, k)
             w = min(w, n)
-            start = stage_of[i] * k
+            start = starts[stage_of[i]]
             chiplets[i] = tuple(order[(start + j) % n] for j in range(w))
             shares[i] = np.full((w,), 1.0 / w)
     return Mapping(list(chiplets), shares, spill_window)
+
+
+def _full_spread(layers: List[Layer], topo: Topology):
+    """All layers on all chiplets, snake order (ring-adjacent neighbours)."""
+    parts = tuple(snake_order(topo))
+    uniform = np.full((len(parts),), 1.0 / len(parts))
+    return parts, [parts] * len(layers), [uniform] * len(layers)
+
+
+def tensor_parallel_mapping(layers: List[Layer], topo: Topology,
+                            spill_window: int = 4,
+                            algorithm: str = "tree") -> Mapping:
+    """Tensor-parallel mapping: every layer sharded across all chiplets.
+
+    Weights are input-dim sharded (Megatron row-parallel), so layer
+    outputs are *partial sums* that must be all-reduced across the
+    chiplet group at layer boundaries.  Graphs that hint their sync
+    points (`Layer.collective == "all_reduce"`, e.g. the o-proj / ff2
+    boundaries the LLM builder marks) all-reduce only there — the
+    Megatron 2-per-block pattern; unhinted graphs (the CNN zoo)
+    all-reduce after every MAC layer.
+
+    ``algorithm="tree"`` (default) reduces up a binary tree and fans the
+    result out as ONE multicast — wired-suboptimal but broadcast-natured,
+    i.e. the collective a hybrid NoP can serve in a single wireless slot
+    (the dataflow/architecture co-design of arXiv:2011.14755).
+    ``algorithm="ring"`` is the classic wired-optimal bandwidth ring
+    whose neighbour unicasts stay on the mesh.
+
+    Inter-layer activations stay chiplet-local (the group and tiling
+    match producer to consumer), so the collectives ARE the mapping's
+    NoP traffic — plus streamed weights and DRAM spills.
+    """
+    from .collectives import CollectiveSpec
+    parts, chiplets, shares = _full_spread(layers, topo)
+    hinted = any(lyr.collective for lyr in layers)
+    specs = []
+    for i, lyr in enumerate(layers):
+        if hinted:
+            sync = lyr.collective in ("all_reduce", "moe")
+        else:
+            sync = lyr.macs > 0 and lyr.act_out > 0
+        if sync and lyr.act_out > 0:
+            specs.append(CollectiveSpec("all_reduce", i, parts,
+                                        float(lyr.act_out),
+                                        algorithm=algorithm))
+    return Mapping(chiplets, shares, spill_window, specs)
+
+
+def expert_parallel_mapping(layers: List[Layer], topo: Topology,
+                            spill_window: int = 4) -> Mapping:
+    """Expert-parallel mapping for MoE graphs (hybrid EP + TP).
+
+    Expert layers (`Layer.collective == "moe"`) spread their expert
+    pool across all chiplets; each MoE boundary emits the all-to-all
+    pair:
+
+    - **dispatch**: a token goes to `experts_per_token` experts with the
+      SAME activation payload, so each source chiplet's local token
+      block is one multicast to the expert-owner chiplets it hits
+      (`fanout = experts_per_token`) — broadcast-natured,
+      wireless-eligible.  With ``experts_per_token == 1`` it decays to
+      plain distinct-shard unicasts.
+    - **combine**: per-token expert partial outputs are distinct per
+      destination — a classic unicast all-to-all of
+      ``experts_per_token``-scaled volume back to the token homes.
+
+    Dense sublayers keep their tensor-parallel all-reduces (tree form)
+    and ``"broadcast"``-hinted layers (router state) fan out from their
+    first chiplet.  Raises on graphs with no ``"moe"`` layer — use
+    `tensor_parallel_mapping` or `pipeline_mapping` there.
+    """
+    from .collectives import CollectiveSpec
+    if not any(lyr.collective == "moe" for lyr in layers):
+        raise ValueError("expert_parallel_mapping needs a graph with "
+                         "'moe'-hinted layers (see workloads_llm); use "
+                         "tensor_parallel_mapping for dense graphs")
+    parts, chiplets, shares = _full_spread(layers, topo)
+    k = len(parts)
+    specs = []
+    for i, lyr in enumerate(layers):
+        if lyr.collective == "moe":
+            ept = max(1, lyr.experts_per_token)
+            specs.append(CollectiveSpec("all_to_all", i, parts,
+                                        float(lyr.act_in) / k, fanout=ept))
+            specs.append(CollectiveSpec("all_to_all", i, parts,
+                                        float(lyr.act_out) * ept / k))
+        elif lyr.collective == "all_reduce":
+            specs.append(CollectiveSpec("all_reduce", i, parts,
+                                        float(lyr.act_out),
+                                        algorithm="tree"))
+        elif lyr.collective == "broadcast":
+            specs.append(CollectiveSpec("broadcast", i, parts,
+                                        float(lyr.act_out)))
+    return Mapping(chiplets, shares, spill_window, specs)

@@ -144,16 +144,35 @@ def simulate_hybrid(trace: TrafficTrace,
 
 
 def make_trace(workload: str, acc: AcceleratorConfig | None = None,
-               mapping: str = "pipeline") -> TrafficTrace:
+               mapping: str | None = None) -> TrafficTrace:
     """Convenience: workload name -> traffic trace on the default platform.
 
-    mapping: "pipeline" (GEMINI/SET-style, default) or "spatial" (full
-    spatial split; the mapping-sensitivity contrast point).
+    The paper's 15 Table-1 workloads map with "pipeline" (GEMINI/
+    SET-style, default) or "spatial" (full spatial split; the
+    mapping-sensitivity contrast point).  LLM frontier names
+    ("<model>:<phase>", e.g. "mixtral_8x22b:decode") route through
+    `workloads_llm.make_llm_trace`, defaulting to the family's natural
+    parallelism (expert-parallel for MoE, tensor-parallel otherwise)
+    with its collective phases — "tensor"/"tensor_ring"/"expert" pick
+    explicitly.
     """
+    if ":" in workload:
+        from .workloads_llm import make_llm_trace
+        return make_llm_trace(workload, acc, mapping)
     topo = build_topology(acc)
     layers = get_workload(workload)
-    mapper = pipeline_mapping if mapping == "pipeline" else spatial_mapping
-    return build_trace(layers, mapper(layers, topo), topo)
+    if mapping in (None, "pipeline"):
+        mapped = pipeline_mapping(layers, topo)
+    elif mapping == "spatial":
+        mapped = spatial_mapping(layers, topo)
+    elif mapping in ("tensor", "tensor_ring"):
+        from .mapper import tensor_parallel_mapping
+        mapped = tensor_parallel_mapping(
+            layers, topo,
+            algorithm="ring" if mapping == "tensor_ring" else "tree")
+    else:
+        raise ValueError(f"unknown mapping {mapping!r}")
+    return build_trace(layers, mapped, topo)
 
 
 def speedup(trace: TrafficTrace, wcfg: WirelessConfig | NetworkConfig) -> float:

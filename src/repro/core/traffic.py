@@ -52,7 +52,11 @@ class Message:
     src: int
     dsts: Tuple[int, ...]
     nbytes: float
-    kind: str                     # "wstream" | "act" | "spill_w" | "spill_r"
+    # "wstream" | "act" | "spill_w" | "spill_r" | "coll"
+    # ("coll" = collective-phase step, see core/collectives.py: ring/tree
+    # chunk unicasts stay wired-costed, multicast fan-outs are
+    # wireless-eligible under the paper's multicast criterion)
+    kind: str
 
     @property
     def is_multicast(self) -> bool:
@@ -179,6 +183,12 @@ def generate_messages(layers: List[Layer], mapping: Mapping,
             if dsts:
                 share = lyr.act_out * mapping.share_of(li, c)
                 msgs.append(Message(li, c, tuple(sorted(dsts)), share, "act"))
+
+    # 3) collective phases the mapping scheduled at layer boundaries
+    # (tensor-parallel all-reduces, MoE all-to-alls, broadcasts)
+    if mapping.collectives:
+        from .collectives import lower_all   # traffic <-> collectives cycle
+        msgs.extend(lower_all(mapping.collectives))
     # drop spill-writes duplicated per consumer edge: a tensor is written to
     # DRAM once even if several late consumers read it
     seen = set()
@@ -194,7 +204,17 @@ def generate_messages(layers: List[Layer], mapping: Mapping,
 
 
 def build_trace(layers: List[Layer], mapping: Mapping,
-                topo: Topology) -> TrafficTrace:
+                topo: Topology,
+                packet_bytes: float = PACKET_BYTES) -> TrafficTrace:
+    """Packetise (graph x mapping) into a vectorised `TrafficTrace`.
+
+    ``packet_bytes`` sets the packetisation granularity (default: the
+    64 KiB NoP packet).  Giant-tensor workloads (the LLM frontier's
+    multi-GB weight streams) pass a coarser granularity so the trace
+    stays tractable — flit aggregation, not a model change: every
+    per-layer aggregate is granularity-independent, only the injection
+    filter's per-packet resolution coarsens.
+    """
     cfg = topo.config
     msgs = generate_messages(layers, mapping, topo)
     n_layers = len(layers)
@@ -233,7 +253,7 @@ def build_trace(layers: List[Layer], mapping: Mapping,
                      for link in topo.multicast_route(m.src, list(m.dsts),
                                                       order)]
             vol = m.nbytes / len(orders)
-            n_pkt = max(1, int(np.ceil(vol / PACKET_BYTES)))
+            n_pkt = max(1, int(np.ceil(vol / packet_bytes)))
             per = vol / n_pkt
             for _ in range(n_pkt):
                 pid = len(layer_l)

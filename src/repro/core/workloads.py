@@ -31,6 +31,15 @@ class Layer:
     weights: int                # weight bytes
     act_out: int                # output activation bytes
     consumers: List[int] = dataclasses.field(default_factory=list)  # layer idxs
+    # collective hint for parallel mappings (`mapper.tensor_parallel_mapping`
+    # / `expert_parallel_mapping`): "all_reduce" marks a partial-sum output
+    # that must be reduced across the layer's chiplet group, "moe" marks an
+    # expert layer whose boundary is an all-to-all dispatch/combine pair.
+    # `None` leaves the choice to the mapper's fallback rule.
+    collective: str | None = None
+    # MoE routing metadata backing the "moe" hint (set by the LLM builder)
+    n_experts: int = 0
+    experts_per_token: int = 0
 
     @property
     def fan_out(self) -> int:
@@ -38,17 +47,32 @@ class Layer:
 
 
 class GraphBuilder:
-    """Tiny helper: append layers, record producer->consumer edges."""
+    """Tiny helper: append layers, record producer->consumer edges.
+
+    ``batch`` scales MACs and activations (weights load once per batch);
+    the LLM builder subclasses with ``batch = 1`` and carries its token
+    counts explicitly.  ``meta`` kwargs (collective hints, MoE routing
+    metadata) pass through to the `Layer`.
+    """
+
+    batch: int = BATCH
 
     def __init__(self) -> None:
         self.layers: List[Layer] = []
 
-    def add(self, name: str, macs: float, act_in: int, weights: int,
-            act_out: int, inputs: List[int] | None = None) -> int:
+    def add(self, name: str, macs: float, act_in: float, weights: float,
+            act_out: float, inputs: List[int] | None = None,
+            **meta) -> int:
         idx = len(self.layers)
-        self.layers.append(Layer(name, macs * BATCH, act_in * BATCH, weights,
-                                 act_out * BATCH))
-        for p in inputs or ([idx - 1] if idx else []):
+        self.layers.append(Layer(name, macs * self.batch,
+                                 int(act_in * self.batch), int(weights),
+                                 int(act_out * self.batch), **meta))
+        # `None` means "chain to the previous layer"; an explicit empty list
+        # means "true source node, no producers" — they must not collapse
+        # (an `inputs=[]` source used to silently wire to its predecessor).
+        if inputs is None:
+            inputs = [idx - 1] if idx else []
+        for p in inputs:
             if p >= 0:
                 self.layers[p].consumers.append(idx)
         return idx
@@ -368,4 +392,12 @@ WORKLOADS: Dict[str, Callable[[], List[Layer]]] = {
 
 
 def get_workload(name: str) -> List[Layer]:
-    return WORKLOADS[name]()
+    if name in WORKLOADS:
+        return WORKLOADS[name]()
+    # "<model>:<phase>" names resolve against the LLM frontier registry
+    # (kept separate so the paper's 15-workload sweeps stay exactly Table 1)
+    from .workloads_llm import LLM_WORKLOADS, llm_workload
+    if name in LLM_WORKLOADS:
+        return llm_workload(name)
+    raise KeyError(f"unknown workload {name!r}; pick one of "
+                   f"{sorted(WORKLOADS)} or {sorted(LLM_WORKLOADS)}")

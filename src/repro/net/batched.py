@@ -59,7 +59,9 @@ class GridSpec:
 
     thresholds: Tuple[int, ...] = PAPER_THRESHOLDS
     injections: Tuple[float, ...] = PAPER_INJECTIONS
-    bandwidths_gbps: Tuple[int, ...] = PAPER_BANDWIDTHS_GBPS
+    # fractional Gb/s are honoured exactly (callers anchoring an event run
+    # against the grid must not round a non-integer-Gb/s network)
+    bandwidths_gbps: Tuple[float, ...] = PAPER_BANDWIDTHS_GBPS
     macs: Tuple[MacConfig, ...] = (MacConfig("ideal"),)
     plans: Tuple[ChannelPlan, ...] = (ChannelPlan(1),)
 
@@ -90,7 +92,7 @@ class GridResult:
             mac=self.spec.macs[mi])
         return float(self.speedup[mi, pi, bi, ti, ii]), cfg
 
-    def ideal_grid(self, bandwidth_gbps: int) -> np.ndarray:
+    def ideal_grid(self, bandwidth_gbps: float) -> np.ndarray:
         """(threshold, injection) speedup grid for ideal MAC, 1 channel."""
         mi = next(i for i, m in enumerate(self.spec.macs)
                   if m.protocol == "ideal")

@@ -1,0 +1,368 @@
+"""Collective-traffic plane + LLM workload frontier (+ bugfix sweep).
+
+- a hand-computed golden ring-all-reduce on a 2x2 grid, validated
+  message by message and packet by packet against pencil-and-paper
+  numbers (chunk sizes, link loads, cut times, eligibility);
+- tree all-reduce: the reduce result fan-out is one wireless-eligible
+  multicast; the MoE dispatch multicast / combine unicast split;
+- the LLM acceptance path: dense + MoE, prefill + decode workloads run
+  through `simulate_hybrid`, `policy_sweep` and `sweep_all` unchanged,
+  and the striped event engine reproduces the analytic layer times to
+  machine precision on the new traces;
+- regression tests for the satellite bugfixes: `GraphBuilder.add`
+  treating `inputs=[]` as falsy, `pipeline_mapping` idling remainder
+  chiplets, `dse.grid_best_speedup` rounding fractional Gb/s, empty
+  `summary`/`network_summary`, and the `wireless.eligibility`
+  boundary-value semantics (multicast >= vs unicast >).
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (AcceleratorConfig, CollectiveSpec, NetworkConfig,
+                        PacketSim, build_topology, make_trace,
+                        simulate_hybrid, simulate_wired, sweep_all)
+from repro.core.collectives import lower
+from repro.core.dse import (NetworkSweepResult, grid_best_speedup,
+                            network_summary, policy_sweep, summary)
+from repro.core.mapper import (Mapping, expert_parallel_mapping,
+                               pipeline_mapping, tensor_parallel_mapping)
+from repro.core.traffic import PACKET_BYTES, TrafficTrace, build_trace
+from repro.core.wireless import eligibility
+from repro.core.workloads import GraphBuilder, get_workload
+from repro.core.workloads_llm import (LLM_WORKLOADS, auto_packet_bytes,
+                                      llm_layers, llm_workload)
+from repro.configs import ARCHS
+from repro.net.batched import GridSpec
+
+NET96 = NetworkConfig(bandwidth=96e9 / 8)
+
+# the four acceptance workloads: dense/MoE x prefill/decode
+ACCEPTANCE = ("smollm_360m:prefill", "smollm_360m:decode",
+              "mixtral_8x22b:prefill", "mixtral_8x22b:decode")
+
+
+@pytest.fixture(scope="module")
+def llm_traces():
+    return {wl: make_trace(wl) for wl in ACCEPTANCE}
+
+
+# ---------------------------------------------------------------------------
+# golden ring all-reduce: 2x2 grid, numbers done by hand
+# ---------------------------------------------------------------------------
+#
+# Snake order on a 2x2 grid is [0, 1, 3, 2] (coords (0,0),(0,1),(1,1),
+# (1,0)), so the ring 0->1->3->2->0 is mesh-adjacent on every edge
+# (1 hop each).  Ring all-reduce of a 256 KiB tensor over k=4:
+# 2(k-1) = 6 rounds, each round every participant unicasts one
+# nbytes/k = 64 KiB chunk to its ring successor -> 24 messages of
+# exactly one 64 KiB packet, 6 chunks per directed ring link.
+
+RING = (0, 1, 3, 2)
+NBYTES = 4 * PACKET_BYTES     # 256 KiB: chunk == one 64 KiB packet
+
+
+def _one_layer_collective_trace(spec) -> TrafficTrace:
+    """A graph with one traffic-free layer carrying only `spec`."""
+    from repro.core.workloads import Layer
+    topo = build_topology(AcceleratorConfig(grid=(2, 2), n_dram=1))
+    layers = [Layer("x", 0.0, 0, 0, 0)]
+    mapping = Mapping([(0, 1, 2, 3)], [np.full(4, 0.25)], 4, [spec])
+    return build_trace(layers, mapping, topo)
+
+
+def test_golden_ring_all_reduce_messages():
+    msgs = lower(CollectiveSpec("all_reduce", 0, RING, NBYTES))
+    assert len(msgs) == 2 * 3 * 4                      # 2(k-1) rounds x k
+    assert all(m.kind == "coll" for m in msgs)
+    assert all(m.nbytes == NBYTES / 4 for m in msgs)   # 64 KiB chunks
+    assert all(len(m.dsts) == 1 for m in msgs)         # ring = unicasts
+    # every message goes to the ring successor
+    succ = {RING[i]: RING[(i + 1) % 4] for i in range(4)}
+    assert all(m.dsts == (succ[m.src],) for m in msgs)
+    # total wire volume: 2(k-1)/k x nbytes per participant
+    assert sum(m.nbytes for m in msgs) == 6 * NBYTES
+
+
+def test_golden_ring_all_reduce_packetisation():
+    tr = _one_layer_collective_trace(
+        CollectiveSpec("all_reduce", 0, RING, NBYTES))
+    # 24 chunk messages -> 24 single-packet entries of 64 KiB
+    assert len(tr.nbytes) == 24
+    np.testing.assert_allclose(tr.nbytes, PACKET_BYTES)
+    assert not tr.is_multicast.any()
+    assert tr.is_multichip.all()
+    np.testing.assert_array_equal(tr.max_hops, 1)      # mesh-adjacent ring
+    np.testing.assert_array_equal(tr.dram_node, -1)
+    # per-link loads: each of the 4 directed ring links carries 6 chunks
+    loads = tr.baseline_link_loads()
+    assert loads.shape == (1, 4)
+    np.testing.assert_allclose(loads, 6 * PACKET_BYTES)
+    # neighbour unicasts are NOT wireless-eligible (strict > for unicasts)
+    assert not eligibility(tr, 1).any()
+    # wired time: each directed cut of the 2x2 mesh has 2 parallel links
+    # and serves one ring link's 6 chunks -> 6 x 64 KiB / (2 x 4 GB/s)
+    cfg = tr.topo.config
+    expect = 6 * PACKET_BYTES / (2 * cfg.nop_bw_per_side)
+    w = simulate_wired(tr)
+    assert w.total_time == pytest.approx(expect)
+    # nothing eligible -> the hybrid run collapses onto the wired one
+    assert simulate_hybrid(tr, NET96).total_time == pytest.approx(expect)
+
+
+def test_golden_ring_chunks_split_into_multiple_packets():
+    tr = _one_layer_collective_trace(
+        CollectiveSpec("all_reduce", 0, RING, 4 * NBYTES))
+    # 256 KiB chunks -> 4 packets each, 96 packets, volume conserved
+    assert len(tr.nbytes) == 96
+    np.testing.assert_allclose(tr.nbytes, PACKET_BYTES)
+    assert float(tr.nbytes.sum()) == 6 * 4 * NBYTES
+
+
+def test_golden_tree_all_reduce_fanout_is_wireless_eligible():
+    msgs = lower(CollectiveSpec("all_reduce", 0, RING, NBYTES,
+                                algorithm="tree"))
+    # k-1 up-tree unicasts + 1 root multicast, all full-tensor sized
+    ups = [m for m in msgs if len(m.dsts) == 1]
+    fan = [m for m in msgs if len(m.dsts) > 1]
+    assert len(ups) == 3 and len(fan) == 1
+    assert all(m.nbytes == NBYTES for m in msgs)
+    assert fan[0].src == RING[0] and fan[0].dsts == (1, 2, 3)
+    tr = _one_layer_collective_trace(
+        CollectiveSpec("all_reduce", 0, RING, NBYTES, algorithm="tree"))
+    # the result fan-out multicast reaches node 2, two hops from the
+    # root: eligible at thresholds 1 AND 2 (multicast criterion is >=)
+    for thr in (1, 2):
+        elig = eligibility(tr, thr)
+        assert elig[tr.is_multicast].all(), thr
+    # the hybrid plane serves it: wireless bytes appear, time never grows
+    h = simulate_hybrid(tr, NetworkConfig(96e9 / 8, injection_prob=1.0))
+    assert h.wireless_bytes > 0
+    assert h.total_time <= simulate_wired(tr).total_time
+
+
+def test_moe_dispatch_multicast_and_combine_unicast():
+    # dispatch: fanout=2 -> each source multicasts its block once
+    disp = lower(CollectiveSpec("all_to_all", 0, RING, NBYTES, fanout=2))
+    assert len(disp) == 4
+    assert all(len(m.dsts) == 2 and m.nbytes == NBYTES for m in disp)
+    # combine: distinct shards -> k(k-1) unicasts of nbytes/k
+    comb = lower(CollectiveSpec("all_to_all", 0, RING, NBYTES))
+    assert len(comb) == 12
+    assert all(len(m.dsts) == 1 and m.nbytes == NBYTES / 4 for m in comb)
+
+
+def test_collective_spec_validation():
+    with pytest.raises(ValueError):
+        CollectiveSpec("all_mangle", 0, RING, 1.0)
+    with pytest.raises(ValueError):
+        CollectiveSpec("all_reduce", 0, (0, 0, 1), 1.0)
+    # algorithm typos must not silently lower as ring
+    with pytest.raises(ValueError):
+        CollectiveSpec("all_reduce", 0, RING, 1.0, algorithm="Tree")
+    with pytest.raises(ValueError):
+        CollectiveSpec("all_reduce", 0, RING, 1.0, algorithm="bcast")
+    with pytest.raises(ValueError):
+        CollectiveSpec("all_to_all", 0, RING, 1.0, algorithm="tree")
+    with pytest.raises(ValueError):
+        CollectiveSpec("broadcast", 0, RING, 1.0, root=7)
+    assert lower(CollectiveSpec("broadcast", 0, (3,), 1.0)) == []
+
+
+# ---------------------------------------------------------------------------
+# LLM workload frontier acceptance
+# ---------------------------------------------------------------------------
+
+def test_llm_registry_covers_dense_and_moe_phases():
+    assert set(ACCEPTANCE) <= set(LLM_WORKLOADS)
+    with pytest.raises(KeyError):
+        get_workload("mixtral_8x22b:train")
+    with pytest.raises(KeyError):
+        llm_workload("resnet50")
+
+
+def test_llm_graphs_are_consistent_and_hinted():
+    for wl in ACCEPTANCE:
+        layers = llm_workload(wl)
+        for i, lyr in enumerate(layers):
+            for c in lyr.consumers:
+                assert i < c < len(layers), (wl, i, c)
+        assert sum(lyr.macs for lyr in layers) > 0
+        assert any(lyr.collective == "all_reduce" for lyr in layers), wl
+    moe = llm_workload("mixtral_8x22b:prefill")
+    assert any(lyr.collective == "moe" for lyr in moe)
+    cfg = ARCHS["mixtral-8x22b"]
+    hinted = [lyr for lyr in moe if lyr.collective == "moe"]
+    assert all(lyr.n_experts == cfg.n_experts
+               and lyr.experts_per_token == cfg.experts_per_token
+               for lyr in hinted)
+
+
+def test_llm_workloads_flow_through_simulate_hybrid(llm_traces):
+    for wl, tr in llm_traces.items():
+        w, h = simulate_wired(tr), simulate_hybrid(tr, NET96)
+        assert w.total_time > 0 and h.total_time > 0
+        assert h.total_time <= w.total_time * (1 + 1e-9), wl
+
+
+def test_llm_prefill_is_collective_heavy_decode_is_not(llm_traces):
+    def coll_share(tr):
+        tot = sum(m.nbytes for m in tr.messages)
+        return sum(m.nbytes for m in tr.messages if m.kind == "coll") / tot
+    assert coll_share(llm_traces["smollm_360m:prefill"]) > 0.3
+    assert coll_share(llm_traces["smollm_360m:decode"]) < 0.1
+    # and the hybrid plane pays off exactly where collectives dominate
+    def sp(tr):
+        return simulate_wired(tr).total_time / \
+            simulate_hybrid(tr, NET96).total_time
+    assert sp(llm_traces["smollm_360m:prefill"]) > 1.2
+    assert sp(llm_traces["smollm_360m:decode"]) < 1.2
+
+
+def test_llm_workloads_flow_through_sweep_all(llm_traces):
+    results = sweep_all(llm_traces)
+    assert len(results) == 2 * len(llm_traces)       # 64 and 96 Gb/s
+    for r in results:
+        assert r.best_speedup >= 1.0, r.workload
+    s = summary(results)
+    assert s[96][0] >= s[64][0] - 1e-9               # more bw never hurts
+
+
+def test_llm_workloads_flow_through_policy_sweep(llm_traces):
+    for wl, tr in llm_traces.items():
+        ps = policy_sweep(tr, wl)
+        assert set(ps.policy_speedups) == {"static", "greedy", "adaptive",
+                                           "oracle"}
+        # the PR-2 policy invariants hold on the collective traces
+        assert ps.policy_speedups["greedy"] >= 1 - 1e-12, wl
+        assert ps.policy_speedups["adaptive"] >= ps.grid_best_speedup - 1e-9, wl
+
+
+def test_llm_striped_event_parity_is_machine_precision(llm_traces):
+    for wl, tr in llm_traces.items():
+        sim = PacketSim(tr, NET96)
+        ev, an = sim.run("static"), simulate_hybrid(tr, NET96)
+        np.testing.assert_allclose(ev.layer_times, an.layer_times,
+                                   rtol=1e-12, err_msg=wl)
+        evw, anw = sim.run_wired(), simulate_wired(tr)
+        np.testing.assert_allclose(evw.layer_times, anw.layer_times,
+                                   rtol=1e-12, err_msg=wl)
+
+
+def test_llm_auto_packet_bytes_keeps_traces_tractable(llm_traces):
+    for wl, tr in llm_traces.items():
+        assert len(tr.nbytes) < 60_000, wl
+    # granularity never drops below the 64 KiB NoP packet
+    assert auto_packet_bytes(llm_workload("smollm_360m:decode")) \
+        >= PACKET_BYTES
+
+
+def test_llm_mapping_variants_and_family_defaults():
+    layers = llm_layers(ARCHS["smollm-360m"], "prefill", units=1)
+    topo = build_topology()
+    tree = tensor_parallel_mapping(layers, topo)
+    ring = tensor_parallel_mapping(layers, topo, algorithm="ring")
+    assert all(s.algorithm == "tree" for s in tree.collectives)
+    assert all(s.algorithm == "ring" for s in ring.collectives)
+    # dense graphs have no moe layers -> expert-parallel refuses
+    with pytest.raises(ValueError):
+        expert_parallel_mapping(layers, topo)
+    # MoE default mapping emits the dispatch/combine all-to-all pair
+    moe_tr = make_trace("mixtral_8x22b:decode")
+    assert any(m.kind == "coll" and len(m.dsts) > 1 for m in moe_tr.messages)
+    with pytest.raises(ValueError):
+        make_trace("smollm_360m:prefill", mapping="hexagonal")
+
+
+def test_unhinted_graph_gets_per_layer_all_reduce():
+    """CNN graphs (no hints) fall back to all-reducing every MAC layer."""
+    layers = get_workload("zfnet")
+    topo = build_topology()
+    m = tensor_parallel_mapping(layers, topo)
+    macs = sum(1 for lyr in layers if lyr.macs > 0 and lyr.act_out > 0)
+    assert len(m.collectives) == macs
+    tr = build_trace(layers, m, topo)
+    assert simulate_wired(tr).total_time > 0
+
+
+# ---------------------------------------------------------------------------
+# bugfix sweep regressions
+# ---------------------------------------------------------------------------
+
+def test_graphbuilder_explicit_empty_inputs_is_source_node():
+    g = GraphBuilder()
+    a = g.add("a", 1.0, 0, 0, 16)
+    b = g.add("b", 1.0, 0, 0, 16, inputs=[])   # a true source, mid-graph
+    c = g.add("c", 1.0, 16, 0, 16)             # implicit chain to b
+    assert g.layers[a].consumers == []          # [] must NOT chain to a
+    assert g.layers[b].consumers == [c]
+    d = g.add("d", 1.0, 32, 0, 16, inputs=[a, b])
+    assert g.layers[a].consumers == [d]
+
+
+def test_pipeline_mapping_uses_all_chiplets_on_non_divisible_grid():
+    """8 layers on 3x3 -> 2 stages; 9 % 2 == 1 chiplet used to sit idle."""
+    layers = get_workload("zfnet")
+    topo = build_topology()
+    m = pipeline_mapping(layers, topo)
+    used = set()
+    for group in m.chiplets:
+        used.update(group)
+    assert used == set(range(topo.config.n_chiplets))
+    # base stage groups differ by at most one chiplet (weight-heavy
+    # layers legitimately widen beyond their stage group)
+    from repro.core.traffic import WEIGHT_SRAM_BYTES
+    sizes = {len(set(g)) for g, lyr in zip(m.chiplets, layers)
+             if lyr.weights <= WEIGHT_SRAM_BYTES}
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_grid_best_speedup_honours_fractional_bandwidth():
+    tr = make_trace("zfnet")
+    net = NetworkConfig(bandwidth=65.5e9 / 8)
+    got = grid_best_speedup(tr, net)
+    from repro.core.dse import batched_design_space
+    ds = batched_design_space(tr)
+    exact = ds.evaluate(GridSpec(bandwidths_gbps=(65.5,)))
+    rounded = ds.evaluate(GridSpec(bandwidths_gbps=(66,)))
+    assert got == float(exact.speedup.max())
+    # the 66 Gb/s grid the old rounding anchored against is a different
+    # surface — the exact grid must not silently collapse onto it
+    assert not np.allclose(exact.speedup, rounded.speedup)
+
+
+def test_summary_guards_against_empty_results():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # NaN mean used to warn
+        assert summary([]) == {}
+        assert network_summary([]) == {}
+    assert isinstance(network_summary([]), dict)
+    assert NetworkSweepResult is not None
+
+
+def test_eligibility_boundary_semantics():
+    """Multicast qualifies AT the threshold (>=), unicast only beyond
+    it (>) — the Fig. 4 calibration's asymmetric boundary."""
+    topo = build_topology(AcceleratorConfig(grid=(1, 2), n_dram=1))
+    n = 4
+    tr = TrafficTrace(
+        topo=topo, n_layers=1, link_index={((0, 0), (0, 1)): 0},
+        layer=np.zeros(n, np.int32),
+        nbytes=np.full(n, 1e6),
+        src=np.zeros(n, np.int32),
+        #             mc@thr  uni@thr  uni@thr+1  mc-below-thr
+        is_multicast=np.array([True, False, False, True]),
+        is_multichip=np.ones(n, bool),
+        max_hops=np.array([2, 2, 3, 1], np.int32),
+        dram_node=np.full(n, -1, np.int32),
+        inc_msg=np.arange(n, dtype=np.int32),
+        inc_link=np.zeros(n, np.int32),
+        t_compute=np.zeros(1), t_dram=np.zeros(1), t_noc=np.zeros(1),
+        dram_bytes=np.zeros(1), messages=[])
+    np.testing.assert_array_equal(
+        eligibility(tr, 2), [True, False, True, False])
+    # at threshold 1 everything multichip qualifies except 1-hop unicasts
+    np.testing.assert_array_equal(
+        eligibility(tr, 1), [True, True, True, True])
