@@ -161,6 +161,37 @@ def fig_llm_collectives(traces=None) -> dict:
     return out
 
 
+def hetero_codesign(traces=None) -> dict:
+    """Beyond-paper heterogeneity figure: placement/co-design search on
+    heterogeneous packages (repro.arch), per catalog mix x paper
+    workload.
+
+    Headline numbers per cell: the hybrid-vs-wired speedup at the
+    co-designed placement, and the best-vs-worst placement spread with
+    and without the wireless plane — does the single-hop broadcast
+    medium make heterogeneous packages placement-insensitive, and does
+    the hybrid speedup survive heterogeneity (vs the paper's
+    homogeneous 10% mean / 20% max)?  (``traces`` is unused: each
+    placement re-derives its own trace.)
+    """
+    from repro.core.dse import hetero_sweep, hetero_summary
+    results = hetero_sweep()
+    out = {}
+    for r in results:
+        out.setdefault(r.mix, {})[r.workload] = {
+            "package": r.package,
+            "wired_best_ms": r.wired.t_wired * 1e3,
+            "hybrid_best_ms": r.hybrid.t_hybrid * 1e3,
+            "speedup_hybrid": r.speedup_hybrid,
+            "speedup_codesigned": r.speedup_codesigned,
+            "spread_wired": r.spread_wired,
+            "spread_hybrid": r.spread_hybrid,
+            "evaluations": r.n_evaluations,
+        }
+    out["_summary"] = hetero_summary(results)
+    return out
+
+
 def mapping_sensitivity(traces=None) -> dict:
     """The paper stresses mapping optimality (optimally-mapped workloads
     are a precondition of its study): communication-aware stage boundaries

@@ -1,9 +1,12 @@
 """Benchmark driver: one function per paper table/figure + the LM-scale
 reports.  Prints ``name,us_per_call,derived`` CSV rows and writes the full
-structured results to experiments/bench_results.json."""
+structured results to experiments/bench_results.json (keys sorted, and
+``--only <row>`` merges into the existing file — so adding or refreshing
+one row churns only that row's diff)."""
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -18,43 +21,52 @@ def _run(name, fn, derived_fn):
     return name, result
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from benchmarks import lm_scale, paper_figs
     from repro.core import make_trace
     from repro.core.workloads import WORKLOADS
 
-    traces = {wl: make_trace(wl) for wl in WORKLOADS}
+    # traces are built on first use: --only rows that never read them
+    # (hetero_codesign, roofline/dryrun) and the unknown-row error path
+    # skip the 15-workload build entirely
+    _traces = {}
+
+    def traces():
+        if not _traces:
+            _traces.update({wl: make_trace(wl) for wl in WORKLOADS})
+        return _traces
+
     results = {}
     rows = [
         ("fig2_bottleneck",
-         lambda: paper_figs.fig2_bottleneck(traces),
+         lambda: paper_figs.fig2_bottleneck(traces()),
          lambda r: "mean_nop_share=%.2f" % (
              sum(v["nop"] for v in r.values()) / len(r))),
         ("fig4_speedup",
-         lambda: paper_figs.fig4_speedup(traces),
+         lambda: paper_figs.fig4_speedup(traces()),
          lambda r: "mean64=%.1f%%;mean96=%.1f%%;max96=%.1f%%" % (
              100 * (r["_summary"][64]["mean"] - 1),
              100 * (r["_summary"][96]["mean"] - 1),
              100 * (r["_summary"][96]["max"] - 1))),
         ("fig5_heatmap",
-         lambda: paper_figs.fig5_heatmap(traces=traces),
+         lambda: paper_figs.fig5_heatmap(traces=traces()),
          lambda r: "peak=%.1f%%;worst=%.1f%%" % (
              max(max(v) for v in r["grid"].values()),
              min(min(v) for v in r["grid"].values()))),
         ("fig4_mac_channels",
-         lambda: paper_figs.fig4_mac_channels(traces),
+         lambda: paper_figs.fig4_mac_channels(traces()),
          lambda r: "ideal_mean=%.1f%%;tdma_mean=%.1f%%;token_mean=%.1f%%" % (
              100 * (r["_summary"]["ideal/1ch"]["mean"] - 1),
              100 * (r["_summary"]["tdma/1ch"]["mean"] - 1),
              100 * (r["_summary"]["token/1ch"]["mean"] - 1))),
         ("sim_fidelity",
-         lambda: paper_figs.fig_sim_fidelity(traces),
+         lambda: paper_figs.fig_sim_fidelity(traces()),
          lambda r: "striped_err=%.1e;adaptive_err=%.1f%%;xy_err=%.1f%%" % (
              r["_summary"]["striped"]["worst_speedup_rel_err"],
              100 * r["_summary"]["adaptive"]["worst_speedup_rel_err"],
              100 * r["_summary"]["xy"]["worst_speedup_rel_err"])),
         ("sim_policies",
-         lambda: paper_figs.fig_sim_policies(traces),
+         lambda: paper_figs.fig_sim_policies(traces()),
          lambda r: "adaptive_beats_grid=%s;greedy_beats_grid=%s;"
          "mean_adaptive=%.1f%%" % (
              r["_summary"]["adaptive"]["beats_grid"],
@@ -67,8 +79,18 @@ def main() -> None:
              100 * (r["_summary_prefill"]["mean_best_96"] - 1),
              100 * (r["_summary_decode"]["mean_best_96"] - 1),
              r["_summary_prefill"]["mean_collective_share"])),
+        ("hetero_codesign",
+         paper_figs.hetero_codesign,
+         lambda r: "mean_codesign=%.1f%%;max_codesign=%.1f%%;"
+         "spread_shrunk=%d/%d" % (
+             100 * (r["_summary"]["_overall"]["mean_speedup_codesigned"]
+                    - 1),
+             100 * (r["_summary"]["_overall"]["max_speedup_codesigned"]
+                    - 1),
+             r["_summary"]["_overall"]["spread_shrunk"],
+             r["_summary"]["_overall"]["n"])),
         ("balancer_vs_sweep",
-         lambda: paper_figs.balancer_vs_sweep(traces),
+         lambda: paper_figs.balancer_vs_sweep(traces()),
          lambda r: "balancer_wins=%d/%d" % (
              sum(v["balancer"] >= v["swept_best"] - 1e-9
                  for v in r.values()), len(r))),
@@ -77,7 +99,7 @@ def main() -> None:
          lambda r: "mac_only/comm_aware=%.2fx" % (
              sum(v["ratio"] for v in r.values()) / len(r))),
         ("edp_report",
-         lambda: paper_figs.edp_report(traces),
+         lambda: paper_figs.edp_report(traces()),
          lambda r: "mean_edp_gain=%.3f;max=%.3f" % (
              sum(v["edp_gain"] for v in r.values()) / len(r),
              max(v["edp_gain"] for v in r.values()))),
@@ -99,6 +121,18 @@ def main() -> None:
          lm_scale.dryrun_summary,
          lambda r: "ok=%d/%d" % (r["ok"], r["total"])),
     ]
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", action="append", metavar="ROW",
+                    help="run only the named row (repeatable); the "
+                         "result is merged into bench_results.json")
+    args = ap.parse_args(argv)
+    if args.only:
+        known = {name for name, _, _ in rows}
+        unknown = sorted(set(args.only) - known)
+        if unknown:
+            ap.error(f"unknown row(s) {unknown}; pick from {sorted(known)}")
+        rows = [r for r in rows if r[0] in set(args.only)]
+
     print("name,us_per_call,derived")
     for name, fn, d in rows:
         n, res = _run(name, fn, d)
@@ -107,8 +141,13 @@ def main() -> None:
     out = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "bench_results.json")
     os.makedirs(os.path.dirname(out), exist_ok=True)
+    merged = {}
+    if args.only and os.path.exists(out):   # --only refreshes rows in place
+        with open(out) as f:                # (full runs rewrite the file,
+            merged = json.load(f)           # so removed rows don't linger)
+    merged.update(results)
     with open(out, "w") as f:
-        json.dump(results, f, indent=1, default=str)
+        json.dump(merged, f, indent=1, sort_keys=True, default=str)
 
 
 if __name__ == "__main__":

@@ -16,22 +16,29 @@ from .simulator import (SimResult, make_trace, simulate_hybrid,
 from .dse import (sweep, sweep_all, summary, SweepResult,
                   network_sweep, network_sweep_all, network_summary,
                   NetworkSweepResult, batched_design_space,
-                  policy_sweep, policy_sweep_all, PolicySweepResult)
+                  policy_sweep, policy_sweep_all, PolicySweepResult,
+                  hetero_sweep, hetero_summary)
 from .balancer import balance, BalancerResult
 from .collectives import CollectiveSpec, collective_bytes
 from .mapper import (Mapping, expert_parallel_mapping, pipeline_mapping,
                      spatial_mapping, tensor_parallel_mapping)
 from .workloads_llm import LLM_WORKLOADS, make_llm_trace
 
-# `repro.sim` (the event-driven engine) is re-exported lazily (PEP 562):
-# it imports `repro.core` submodules, so an eager import here would make
-# the two packages' initialisation order observable.  Attribute access
-# resolves against the fully-initialised `repro.sim` on first use.
+# `repro.sim` (the event-driven engine) and `repro.arch` (heterogeneous
+# packages + placement co-design) are re-exported lazily (PEP 562): both
+# import `repro.core` submodules, so an eager import here would make the
+# packages' initialisation order observable.  Attribute access resolves
+# against the fully-initialised package on first use.
 _SIM_EXPORTS = (
     "PacketSim", "EventResult", "simulate_events",
     "StaticPolicy", "OraclePolicy", "GreedyPolicy", "AdaptivePolicy",
     "FixedPolicy", "get_policy", "POLICIES",
     "fidelity_report", "policy_report",
+)
+_ARCH_EXPORTS = (
+    "ChipletSpec", "HeteroPackage", "CATALOG", "MIXES",
+    "PlacementProblem", "PlacementResult", "CodesignResult",
+    "codesign", "anneal", "exhaustive", "greedy_seed",
 )
 
 
@@ -39,6 +46,9 @@ def __getattr__(name):
     if name in _SIM_EXPORTS:
         import repro.sim
         return getattr(repro.sim, name)
+    if name in _ARCH_EXPORTS:
+        import repro.arch
+        return getattr(repro.arch, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
@@ -51,10 +61,12 @@ __all__ = [
     "network_sweep", "network_sweep_all", "network_summary",
     "NetworkSweepResult", "batched_design_space",
     "policy_sweep", "policy_sweep_all", "PolicySweepResult",
+    "hetero_sweep", "hetero_summary",
     "balance", "BalancerResult",
     "CollectiveSpec", "collective_bytes",
     "Mapping", "pipeline_mapping", "spatial_mapping",
     "tensor_parallel_mapping", "expert_parallel_mapping",
     "LLM_WORKLOADS", "make_llm_trace",
     *_SIM_EXPORTS,
+    *_ARCH_EXPORTS,
 ]

@@ -258,6 +258,59 @@ def policy_sweep_all(traces: Dict[str, TrafficTrace],
             for wl, tr in traces.items()]
 
 
+def hetero_sweep(workloads=None,
+                 mixes: Tuple[str, ...] = ("big_little", "compute_mem",
+                                           "aimc_edge"),
+                 net: NetworkConfig | None = None,
+                 grid: Tuple[int, int] = (3, 3), seed: int = 0,
+                 steps: int = 150, restarts: int = 1,
+                 n_samples: int = 8) -> list:
+    """The heterogeneity frontier: placement co-design per (mix, workload).
+
+    For every catalog mix x workload, run `repro.arch.codesign` — the
+    joint placement/layer-assignment search under the wired and hybrid
+    objectives — and report (i) the hybrid-vs-wired speedup at the
+    co-designed placement and (ii) the best-vs-worst placement spread
+    with and without the wireless plane.  Defaults cover the paper's 15
+    workloads; LLM frontier names work too.
+    """
+    from repro.arch import codesign    # arch builds on core: late import
+    if workloads is None:
+        from .workloads import WORKLOADS
+        workloads = list(WORKLOADS)
+    return [codesign(wl, mix, net, grid, seed=seed, steps=steps,
+                     restarts=restarts, n_samples=n_samples)
+            for mix in mixes for wl in workloads]
+
+
+def hetero_summary(results) -> Dict[str, Dict[str, float]]:
+    """Per-mix (and overall) aggregates of a `hetero_sweep` run."""
+    out: Dict[str, Dict[str, float]] = {}
+    mixes = sorted({r.mix for r in results})
+    for mix in mixes + ["_overall"]:
+        rs = [r for r in results if mix == "_overall" or r.mix == mix]
+        if not rs:        # empty sweep: no NaN means (as in `summary`)
+            continue
+        out[mix] = {
+            "mean_speedup_hybrid": float(
+                np.mean([r.speedup_hybrid for r in rs])),
+            "max_speedup_hybrid": float(
+                np.max([r.speedup_hybrid for r in rs])),
+            "mean_speedup_codesigned": float(
+                np.mean([r.speedup_codesigned for r in rs])),
+            "max_speedup_codesigned": float(
+                np.max([r.speedup_codesigned for r in rs])),
+            "mean_spread_wired": float(
+                np.mean([r.spread_wired for r in rs])),
+            "mean_spread_hybrid": float(
+                np.mean([r.spread_hybrid for r in rs])),
+            "spread_shrunk": sum(r.spread_hybrid < r.spread_wired
+                                 for r in rs),
+            "n": len(rs),
+        }
+    return out
+
+
 def summary(results: List[SweepResult]) -> Dict[int, Tuple[float, float]]:
     """bandwidth -> (mean best speedup, max best speedup) over workloads.
 

@@ -52,21 +52,37 @@ class Mapping:
         return float(self.shares[layer][seq.index(chiplet)])
 
 
+def chiplet_rates(topo: Topology) -> np.ndarray | None:
+    """Per-chiplet compute rates (ops/s), or `None` for a uniform package.
+
+    Heterogeneous packages (`repro.arch.HeteroPackage`) carry a per-slot
+    rate vector on the lowered `AcceleratorConfig`; a missing or
+    all-equal vector means every legacy uniform-split expression applies
+    unchanged (the homogeneous-parity contract).
+    """
+    r = topo.config.chiplet_tops
+    if r is None:
+        return None
+    v = np.asarray(r, float)
+    return None if np.all(v == v[0]) else v
+
+
 def spatial_mapping(layers: List[Layer], topo: Topology,
                     spill_window: int = 4) -> Mapping:
-    """Canonical GEMINI-like mapping: full spatial split of every layer."""
+    """Canonical GEMINI-like mapping: full spatial split of every layer.
+
+    On a heterogeneous package the output-channel tiling is
+    compute-balanced — each chiplet's share is proportional to its rate,
+    so every chiplet finishes a layer at the same time (join/identity
+    layers inherit the same partitioning, staying NoP-free).
+    """
     n = topo.config.n_chiplets
     all_chips = tuple(range(n))
-    uniform = np.full((n,), 1.0 / n)
-    chiplets, shares = [], []
-    for lyr in layers:
-        if lyr.macs == 0 and lyr.weights == 0:
-            # join/identity layer: inherits producer partitioning
-            chiplets.append(all_chips)
-            shares.append(uniform)
-        else:
-            chiplets.append(all_chips)
-            shares.append(uniform)
+    rates = chiplet_rates(topo)
+    share = (np.full((n,), 1.0 / n) if rates is None
+             else rates / rates.sum())
+    chiplets = [all_chips for _ in layers]
+    shares = [share for _ in layers]
     return Mapping(chiplets, shares, spill_window)
 
 
@@ -98,14 +114,30 @@ def pipeline_mapping(layers: List[Layer], topo: Topology,
     n_stages = min(n_stages or n, n, max(1, len(layers) // 3))
     order = snake_order(topo)
     total = sum(lyr.macs for lyr in layers) or 1.0
-    # MAC-balanced contiguous segmentation...
+    # every stage owns a contiguous chiplet group; when stages don't divide
+    # the array the first n % n_stages stages take one extra chiplet, so
+    # ALL chiplets are used (the trailing remainder used to sit idle)
+    k, rem = divmod(n, n_stages)
+    sizes = [k + (s < rem) for s in range(n_stages)]
+    starts = [0]
+    for sz in sizes:
+        starts.append(starts[-1] + sz)
+    groups = [tuple(order[starts[s]:starts[s + 1]]) for s in range(n_stages)]
+    # MAC-balanced contiguous segmentation; on a heterogeneous package
+    # the per-stage MAC target is proportional to the stage group's
+    # aggregate compute rate rather than to its 1/n_stages head count
+    rates = chiplet_rates(topo)
+    if rates is not None:
+        grp_rate = np.array([sum(rates[c] for c in g) for g in groups])
+        cum_share = np.cumsum(grp_rate) / grp_rate.sum()
     acc, stage = 0.0, 0
     stage_of: List[int] = []
     for lyr in layers:
         stage_of.append(stage)
         acc += lyr.macs
         while (stage < n_stages - 1
-               and acc >= total * (stage + 1) / n_stages):
+               and acc >= (total * cum_share[stage] if rates is not None
+                           else total * (stage + 1) / n_stages)):
             stage += 1
     # ...refined communication-aware: nudge each stage boundary (within a
     # small window) to the cut with the smallest crossing tensor, as a
@@ -123,40 +155,48 @@ def pipeline_mapping(layers: List[Layer], topo: Topology,
                    key=lambda i: layers[i - 1].act_out)
         for i in range(min(b, best), max(b, best)):
             stage_of[i] = s if best < b else s - 1
-    # every stage owns a contiguous chiplet group; when stages don't divide
-    # the array the first n % n_stages stages take one extra chiplet, so
-    # ALL chiplets are used (the trailing remainder used to sit idle)
-    k, rem = divmod(n, n_stages)
-    sizes = [k + (s < rem) for s in range(n_stages)]
-    starts = [0]
-    for sz in sizes:
-        starts.append(starts[-1] + sz)
-    groups = [tuple(order[starts[s]:starts[s + 1]]) for s in range(n_stages)]
+    def _group_shares(g):
+        """Within-group split: uniform, or rate-proportional on hetero."""
+        if rates is None:
+            return np.full((len(g),), 1.0 / len(g))
+        v = rates[list(g)]
+        return v / v.sum()
+
     chiplets: List[Sequence[int]] = [groups[s] for s in stage_of]
-    shares = [np.full((len(groups[s]),), 1.0 / len(groups[s]))
-              for s in stage_of]
+    shares = [_group_shares(groups[s]) for s in stage_of]
     # Weight-heavy layers (big FC / gate matrices) are spatially spread so
     # per-chiplet weight slices fit the SRAM budget — widening outward from
     # the layer's own stage group (GEMINI splits such layers spatially).
+    # The budget is per-chiplet on heterogeneous packages (the group's
+    # tightest slot, matching traffic._layer_sram's streamed-vs-resident
+    # gate); uniform packages keep the calibrated global constant.
     from .traffic import WEIGHT_SRAM_BYTES  # calibrated constant
+    sram_vec = topo.config.chiplet_sram
     for i, lyr in enumerate(layers):
-        if lyr.weights > WEIGHT_SRAM_BYTES:
-            need = int(np.ceil(lyr.weights / WEIGHT_SRAM_BYTES))
+        budget = (WEIGHT_SRAM_BYTES if sram_vec is None
+                  else min(sram_vec[c] for c in chiplets[i]))
+        if lyr.weights > budget:
+            need = int(np.ceil(lyr.weights / budget))
             w = sizes[stage_of[i]]
             while w < min(need, n):
                 w += max(1, k)
             w = min(w, n)
             start = starts[stage_of[i]]
             chiplets[i] = tuple(order[(start + j) % n] for j in range(w))
-            shares[i] = np.full((w,), 1.0 / w)
+            shares[i] = _group_shares(chiplets[i])
     return Mapping(list(chiplets), shares, spill_window)
 
 
 def _full_spread(layers: List[Layer], topo: Topology):
-    """All layers on all chiplets, snake order (ring-adjacent neighbours)."""
+    """All layers on all chiplets, snake order (ring-adjacent neighbours).
+
+    Shards are uniform on a homogeneous package and rate-proportional on
+    a heterogeneous one (compute-balanced tensor/expert parallelism)."""
     parts = tuple(snake_order(topo))
-    uniform = np.full((len(parts),), 1.0 / len(parts))
-    return parts, [parts] * len(layers), [uniform] * len(layers)
+    rates = chiplet_rates(topo)
+    share = (np.full((len(parts),), 1.0 / len(parts)) if rates is None
+             else rates[list(parts)] / rates[list(parts)].sum())
+    return parts, [parts] * len(layers), [share] * len(layers)
 
 
 def tensor_parallel_mapping(layers: List[Layer], topo: Topology,

@@ -89,12 +89,41 @@ def _finalize(trace: TrafficTrace, link_loads: np.ndarray,
     )
 
 
+def mac_energy_pj(trace: TrafficTrace) -> float:
+    """Compute energy (pJ), heterogeneity-aware.
+
+    Per-MAC coefficients live on `ChipletSpec` (`AcceleratorConfig
+    .chiplet_pj_per_mac`); a uniform coefficient vector collapses to the
+    legacy `total_macs * pj` product (bit-identical homogeneous energy),
+    a heterogeneous one charges each chiplet's MACs at its own rate.
+    """
+    pj = trace.topo.config.chiplet_pj_per_mac
+    if pj is None or trace.macs_per_chiplet is None:
+        return trace.total_macs * PJ_PER_MAC
+    v = np.asarray(pj, float)
+    if np.all(v == v[0]):
+        return trace.total_macs * float(v[0])
+    return float(trace.macs_per_chiplet @ v)
+
+
+def noc_energy_pj(trace: TrafficTrace) -> float:
+    """On-chip-mesh transport energy (pJ), heterogeneity-aware (see
+    `mac_energy_pj`; coefficients from `chiplet_pj_per_bit_noc`)."""
+    pj = trace.topo.config.chiplet_pj_per_bit_noc
+    if pj is None or trace.noc_bytes_per_chiplet is None:
+        return trace.noc_bytes * 8 * PJ_PER_BIT_NOC
+    v = np.asarray(pj, float)
+    if np.all(v == v[0]):
+        return trace.noc_bytes * 8 * float(v[0])
+    return float(trace.noc_bytes_per_chiplet @ v) * 8
+
+
 def energy_joules(trace: TrafficTrace, link_loads: np.ndarray,
                   wireless_bytes: float = 0.0) -> float:
     """Platform energy per inference: compute + DRAM + NoC + NoP + WL."""
-    e = trace.total_macs * PJ_PER_MAC * 1e-12
+    e = mac_energy_pj(trace) * 1e-12
     e += float(trace.dram_bytes.sum()) * 8 * PJ_PER_BIT_DRAM * 1e-12
-    e += trace.noc_bytes * 8 * PJ_PER_BIT_NOC * 1e-12
+    e += noc_energy_pj(trace) * 1e-12
     e += float(link_loads.sum()) * 8 * PJ_PER_BIT_NOP_HOP * 1e-12
     e += wireless_bytes * 8 * PJ_PER_BIT_WIRELESS * 1e-12
     return e

@@ -38,6 +38,19 @@ class AcceleratorConfig:
     pe_mesh: Tuple[int, int] = (16, 16)      # PEs per chiplet (NoC nodes)
     chiplet_mm: float = 5.0                  # chiplet edge length (layout only)
     freq_ghz: float = 1.0
+    # --- heterogeneous package (repro.arch) ---
+    # Per-chiplet vectors, indexed by chiplet id (row-major grid slot).
+    # `None` (the default) keeps the uniform package: every rate derives
+    # from the scalars above and every modelling plane takes the exact
+    # code path it took before heterogeneity existed.  `HeteroPackage
+    # .to_config()` populates them; each consumer falls back to the
+    # uniform expression whenever the values it needs are all equal, so
+    # a package of identical chiplets is bit-identical to the scalars.
+    chiplet_tops: Tuple[float, ...] | None = None         # ops/s per slot
+    chiplet_noc_bw: Tuple[float, ...] | None = None       # B/s per NoC port
+    chiplet_sram: Tuple[int, ...] | None = None           # weight-SRAM bytes
+    chiplet_pj_per_mac: Tuple[float, ...] | None = None
+    chiplet_pj_per_bit_noc: Tuple[float, ...] | None = None
 
     @property
     def n_chiplets(self) -> int:

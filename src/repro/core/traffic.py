@@ -89,6 +89,11 @@ class TrafficTrace:
     messages: List[Message]
     total_macs: float = 0.0        # for the energy model
     noc_bytes: float = 0.0
+    # per-chiplet totals (C,), for heterogeneous energy accounting
+    # (`ChipletSpec` per-MAC / per-bit coefficients); `None` on traces
+    # built before heterogeneity existed
+    macs_per_chiplet: np.ndarray | None = None
+    noc_bytes_per_chiplet: np.ndarray | None = None
 
     @property
     def n_links(self) -> int:
@@ -130,8 +135,32 @@ class TrafficTrace:
         return mat, n_par * bw
 
 
-def _streamed(lyr: Layer) -> bool:
-    return lyr.weights > WEIGHT_SRAM_BYTES
+def _streamed(lyr: Layer, sram: float = WEIGHT_SRAM_BYTES) -> bool:
+    return lyr.weights > sram
+
+
+def _uniform(vals) -> bool:
+    """True iff every value equals the first (exact float equality —
+    the gate deciding legacy-expression vs per-chiplet costing)."""
+    it = iter(vals)
+    first = next(it)
+    return all(v == first for v in it)
+
+
+def _layer_sram(cfg, chips) -> float:
+    """Weight-SRAM budget governing a layer's streamed-vs-resident call.
+
+    Uniform packages use the global calibrated constant; heterogeneous
+    packages (`AcceleratorConfig.chiplet_sram`) take the tightest budget
+    among the executing chiplets — a weight slice must fit everywhere
+    the layer runs.  A uniform `HeteroPackage` of "standard" chiplets
+    carries exactly `WEIGHT_SRAM_BYTES` per slot, so the comparison is
+    unchanged.
+    """
+    sram = cfg.chiplet_sram
+    if sram is None or not chips:
+        return WEIGHT_SRAM_BYTES
+    return min(sram[c] for c in chips)
 
 
 def generate_messages(layers: List[Layer], mapping: Mapping,
@@ -144,7 +173,7 @@ def generate_messages(layers: List[Layer], mapping: Mapping,
         placed = list(mapping.chiplets[li])
 
         # 1) streamed weights: striped over all DRAM chiplets, unicast in.
-        if lyr.weights and _streamed(lyr):
+        if lyr.weights and _streamed(lyr, _layer_sram(topo.config, placed)):
             for d in range(n_dram):
                 for c in placed:
                     msgs.append(Message(
@@ -275,25 +304,58 @@ def build_trace(layers: List[Layer], mapping: Mapping,
     max_hops = np.asarray(max_hops_l, np.int32)
 
     # --- wireless-independent per-layer terms ---
-    # compute: layer runs on its mapped chiplets at the derated peak rate
-    t_comp = np.array([
-        2.0 * lyr.macs / (cfg.tops_per_chiplet
-                          * max(1, len(mapping.chiplets[i]))
-                          * COMPUTE_EFFICIENCY)
-        for i, lyr in enumerate(layers)])
     dram_bytes = np.zeros(n_layers)
     for m in msgs:
         if m.kind in ("wstream", "spill_r", "spill_w"):
             dram_bytes[m.layer] += m.nbytes
     t_dram = dram_bytes / cfg.dram_bw_total
-    # NoC: tile in + tile out + (streamed) weight slice through the
-    # chiplet-local mesh; chiplets operate in parallel.
+    # compute + NoC, per layer.  A heterogeneous package
+    # (`cfg.chiplet_tops` / `chiplet_noc_bw` per-slot vectors) finishes
+    # at the slowest executing chiplet's share/rate; whenever the rates
+    # AND shares across the executing chiplets are all equal, the exact
+    # legacy uniform expression is used, so a package of identical
+    # chiplets reproduces the homogeneous numbers bit for bit.
+    rates, nbw = cfg.chiplet_tops, cfg.chiplet_noc_bw
+    macs_pc = np.zeros(cfg.n_chiplets)
+    nocb_pc = np.zeros(cfg.n_chiplets)
+    t_comp = np.zeros(n_layers)
     t_noc = np.zeros(n_layers)
     for i, lyr in enumerate(layers):
-        n_exec = max(1, len(mapping.chiplets[i]))
-        w_local = lyr.weights / n_exec if _streamed(lyr) else 0.0
-        t_noc[i] = ((lyr.act_in + lyr.act_out) / n_exec + w_local) \
-            / (cfg.noc_bw_per_port * NOC_PARALLEL)
+        chips = list(mapping.chiplets[i])
+        n_exec = max(1, len(chips))
+        shares = np.asarray(mapping.shares[i], float)
+        for c, s in zip(chips, shares):    # hetero energy accounting
+            macs_pc[c] += lyr.macs * s
+            nocb_pc[c] += (lyr.act_in + lyr.act_out) * s
+        uni_share = bool(chips) and bool(np.all(shares == shares[0]))
+        # compute: layer runs on its mapped chiplets at the derated peak
+        if rates is None or not chips:
+            t_comp[i] = 2.0 * lyr.macs / (cfg.tops_per_chiplet
+                                          * n_exec * COMPUTE_EFFICIENCY)
+        elif uni_share and _uniform(rates[c] for c in chips):
+            t_comp[i] = 2.0 * lyr.macs / (rates[chips[0]]
+                                          * n_exec * COMPUTE_EFFICIENCY)
+        else:
+            t_comp[i] = 2.0 * lyr.macs * max(
+                s / rates[c] for c, s in zip(chips, shares)) \
+                / COMPUTE_EFFICIENCY
+        # NoC: tile in + tile out + (streamed) weight slice through the
+        # chiplet-local mesh; chiplets operate in parallel.
+        streamed = _streamed(lyr, _layer_sram(cfg, chips))
+        acts = lyr.act_in + lyr.act_out
+        if nbw is None or not chips:
+            w_local = lyr.weights / n_exec if streamed else 0.0
+            t_noc[i] = (acts / n_exec + w_local) \
+                / (cfg.noc_bw_per_port * NOC_PARALLEL)
+        elif uni_share and _uniform(nbw[c] for c in chips):
+            w_local = lyr.weights / n_exec if streamed else 0.0
+            t_noc[i] = (acts / n_exec + w_local) \
+                / (nbw[chips[0]] * NOC_PARALLEL)
+        else:
+            t_noc[i] = max(
+                (acts * s + (lyr.weights * s if streamed else 0.0))
+                / (nbw[c] * NOC_PARALLEL)
+                for c, s in zip(chips, shares))
 
     return TrafficTrace(
         topo=topo, n_layers=n_layers, link_index=link_index,
@@ -306,4 +368,5 @@ def build_trace(layers: List[Layer], mapping: Mapping,
         dram_bytes=dram_bytes, messages=msgs,
         total_macs=float(sum(lyr.macs for lyr in layers)),
         noc_bytes=float(sum(lyr.act_in + lyr.act_out for lyr in layers)),
+        macs_per_chiplet=macs_pc, noc_bytes_per_chiplet=nocb_pc,
     )

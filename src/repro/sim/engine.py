@@ -46,8 +46,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.simulator import (BOTTLENECKS, PJ_PER_BIT_DRAM,
-                                  PJ_PER_BIT_NOC, PJ_PER_BIT_NOP_HOP,
-                                  PJ_PER_MAC)
+                                  PJ_PER_BIT_NOP_HOP, mac_energy_pj,
+                                  noc_energy_pj)
 from repro.core.traffic import TrafficTrace
 from repro.core.wireless import eligibility, wireless_energy_joules
 from repro.net.config import as_network
@@ -207,12 +207,13 @@ class PacketSim:
         layer_times = stack.max(axis=0)
         which = stack.argmax(axis=0)
         wl_bytes = float(tr.nbytes[mask].sum())
-        # platform energy: same per-bit constants as the analytic model;
-        # wired NoP bits = bytes x traversed links, route-exact
+        # platform energy: same (per-chiplet-aware) constants as the
+        # analytic model; wired NoP bits = bytes x traversed links,
+        # route-exact
         byte_links = float((tr.nbytes * self.route_len)[~mask].sum())
-        energy = (tr.total_macs * PJ_PER_MAC
+        energy = (mac_energy_pj(tr)
                   + float(tr.dram_bytes.sum()) * 8 * PJ_PER_BIT_DRAM
-                  + tr.noc_bytes * 8 * PJ_PER_BIT_NOC
+                  + noc_energy_pj(tr)
                   + byte_links * 8 * PJ_PER_BIT_NOP_HOP
                   + (wl_bytes + extra_bytes) * 8
                   * self.net.energy_pj_per_bit) * 1e-12
