@@ -161,6 +161,33 @@ def fig_llm_collectives(traces=None) -> dict:
     return out
 
 
+def fig_scaling_frontier(traces=None) -> dict:
+    """Beyond-paper scale-out figure: large-mesh packages x spatial
+    channel reuse.
+
+    Per mesh in `dse.SCALING_GRIDS` (weak-scaled: per-chiplet Table-1
+    rates, perimeter-scaled DRAM, FIXED wireless band) and per paper
+    workload: the best DSE speedup with (i) the single shared wireless
+    channel and (ii) distance-gated spatial reuse zones — where the
+    global serialization point collapses at scale and how much speedup
+    reuse recovers.  (``traces`` is unused: every mesh re-derives its
+    own traces.)
+    """
+    from repro.core.dse import scaling_sweep, scaling_summary
+    results = scaling_sweep()
+    out = {}
+    for r in results:
+        out.setdefault(f"{r.grid[0]}x{r.grid[1]}", {})[r.workload] = {
+            "wired_ms": r.wired_time * 1e3,
+            "best_single": r.best_single,
+            "best_reuse": r.best_reuse,
+            "recovered": r.recovered,
+            "reuse_plan": r.best_reuse_plan,
+        }
+    out["_summary"] = scaling_summary(results)
+    return out
+
+
 def hetero_codesign(traces=None) -> dict:
     """Beyond-paper heterogeneity figure: placement/co-design search on
     heterogeneous packages (repro.arch), per catalog mix x paper

@@ -79,6 +79,14 @@ def main(argv=None) -> None:
              100 * (r["_summary_prefill"]["mean_best_96"] - 1),
              100 * (r["_summary_decode"]["mean_best_96"] - 1),
              r["_summary_prefill"]["mean_collective_share"])),
+        ("scaling_frontier",
+         paper_figs.fig_scaling_frontier,
+         lambda r: "mean8x8_single=%.1f%%;mean8x8_reuse=%.1f%%;"
+         "mean16x16_single=%.1f%%;mean16x16_reuse=%.1f%%" % (
+             100 * (r["_summary"]["8x8"]["mean_single"] - 1),
+             100 * (r["_summary"]["8x8"]["mean_reuse"] - 1),
+             100 * (r["_summary"]["16x16"]["mean_single"] - 1),
+             100 * (r["_summary"]["16x16"]["mean_reuse"] - 1))),
         ("hetero_codesign",
          paper_figs.hetero_codesign,
          lambda r: "mean_codesign=%.1f%%;max_codesign=%.1f%%;"

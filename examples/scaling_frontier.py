@@ -1,0 +1,71 @@
+"""The scale-out frontier, end to end: weak-scaled large-mesh packages
+(4x4 .. 16x16 chiplets, per-chiplet Table-1 rates, perimeter-scaled
+DRAM, FIXED wireless band) with and without distance-gated spatial
+channel reuse.
+
+The paper's 3x3 platform serves its wireless traffic from ONE shared
+medium; this sweep shows where that global serialization point
+collapses as the mesh grows — and how much of the hybrid speedup
+spatially-separated reuse zones (graphene-agile-interconnect style)
+recover.  ``--quick`` trims the mesh list and workload set for CI
+smoke runs.
+
+    PYTHONPATH=src python examples/scaling_frontier.py [workload ...]
+        [--quick] [--bw=96]
+"""
+
+import sys
+
+from repro.core import (ChannelPlan, NetworkConfig, reuse_plans,
+                        scaled_config, scaling_summary, scaling_sweep,
+                        simulate_hybrid, simulate_wired, make_trace)
+from repro.core.dse import SCALING_GRIDS, grid_best_speedup
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    quick = "--quick" in sys.argv[1:]
+    bw = float(next((a.split("=", 1)[1] for a in sys.argv[1:]
+                     if a.startswith("--bw=")), "96"))
+    workloads = args or (["zfnet", "googlenet", "transformer_cell"]
+                         if quick else None)
+    grids = ((4, 4), (8, 8)) if quick else SCALING_GRIDS
+
+    results = scaling_sweep(workloads=workloads, grids=grids,
+                            bandwidth_gbps=bw)
+    print(f"== scale-out frontier @ {bw:.0f} Gb/s wireless "
+          f"(weak-scaled per-chiplet Table-1 rates) ==")
+    print(f"{'mesh':>7s} {'workload':>18s} {'wired ms':>9s} "
+          f"{'1ch':>7s} {'reuse':>7s}  winning plan")
+    for r in results:
+        mark = " <- reuse recovers" if r.recovered > 0.005 else ""
+        print(f"{r.grid[0]:>4d}x{r.grid[1]:<2d} {r.workload:>18s} "
+              f"{r.wired_time*1e3:9.3f} {100*(r.best_single-1):+6.1f}% "
+              f"{100*(r.best_reuse-1):+6.1f}%  {r.best_reuse_plan}{mark}")
+    print("\nper-mesh summary (mean over workloads):")
+    for mesh, s in scaling_summary(results).items():
+        print(f"  {mesh:>7s}: single {100*(s['mean_single']-1):+6.1f}%  "
+              f"reuse {100*(s['mean_reuse']-1):+6.1f}%  "
+              f"(recovered {100*s['mean_recovered']:+.1f} pts "
+              f"over {s['n']} workloads)")
+
+    # one worked point: the largest mesh, best reuse plan vs one channel,
+    # through the full analytic stack (same numbers as the batched DSE)
+    grid = grids[-1]
+    wl = (workloads or ["transformer_cell"])[-1]
+    acc = scaled_config(grid)
+    tr = make_trace(wl, acc)
+    base = simulate_wired(tr).total_time
+    plans = (ChannelPlan(1),) + reuse_plans(grid)
+    print(f"\nworked point: {wl} on {grid[0]}x{grid[1]} "
+          f"({acc.n_chiplets} chiplets, {acc.n_dram} DRAM):")
+    for plan in plans:
+        net = NetworkConfig(bandwidth=bw * 1e9 / 8, channels=plan)
+        sp = grid_best_speedup(tr, net)
+        h = simulate_hybrid(tr, net)
+        print(f"  {plan.describe():>14s}: DSE-best {100*(sp-1):+6.1f}%  "
+              f"(default thr/inj point: {100*(base/h.total_time-1):+6.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

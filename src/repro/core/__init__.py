@@ -17,7 +17,9 @@ from .dse import (sweep, sweep_all, summary, SweepResult,
                   network_sweep, network_sweep_all, network_summary,
                   NetworkSweepResult, batched_design_space,
                   policy_sweep, policy_sweep_all, PolicySweepResult,
-                  hetero_sweep, hetero_summary)
+                  hetero_sweep, hetero_summary,
+                  SCALING_GRIDS, ScalingResult, reuse_plans, scaled_config,
+                  scaling_sweep, scaling_summary)
 from .balancer import balance, BalancerResult
 from .collectives import CollectiveSpec, collective_bytes
 from .mapper import (Mapping, expert_parallel_mapping, pipeline_mapping,
@@ -62,6 +64,8 @@ __all__ = [
     "NetworkSweepResult", "batched_design_space",
     "policy_sweep", "policy_sweep_all", "PolicySweepResult",
     "hetero_sweep", "hetero_summary",
+    "SCALING_GRIDS", "ScalingResult", "reuse_plans", "scaled_config",
+    "scaling_sweep", "scaling_summary",
     "balance", "BalancerResult",
     "CollectiveSpec", "collective_bytes",
     "Mapping", "pipeline_mapping", "spatial_mapping",

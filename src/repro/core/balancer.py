@@ -46,9 +46,17 @@ from repro.net.mac import mac_times
 from repro.net.stack import network_layer_times
 
 from .simulator import SimResult, _finalize, energy_joules, simulate_wired
+from .topology import node_grid_coords
 from .traffic import TrafficTrace
 from .wireless import (WirelessConfig, eligibility, injection_filter,
                        wireless_energy_joules)
+
+
+def _geometry(trace: TrafficTrace) -> dict:
+    """`network_layer_times` geometry kwargs (spatial-reuse plans)."""
+    return dict(grid=trace.topo.config.grid,
+                node_coords=node_grid_coords(trace.topo),
+                max_hops=trace.max_hops)
 
 
 @dataclasses.dataclass
@@ -70,7 +78,7 @@ def _mask_parts(trace: TrafficTrace, mask: np.ndarray, net: NetworkConfig,
         trace.nbytes[trace.inc_msg[edges]])
     t_wl, _, _ = network_layer_times(
         trace.n_layers, trace.layer, trace.nbytes, trace.src,
-        trace.topo.n_nodes, mask, net)
+        trace.topo.n_nodes, mask, net, **_geometry(trace))
     t_nop = ((loads @ cut_mat / cut_bw).max(axis=1) if loads.size
              else np.zeros(trace.n_layers))
     return loads, t_nop, t_wl
@@ -94,6 +102,17 @@ def _stitch_best(trace: TrafficTrace, net: NetworkConfig,
     return final, loads
 
 
+def _wl_time(mac, ch_bytes, ch_msgs, ch_active, bw_c, n_reuse):
+    """Hottest-channel time of a (n_ch, n_zcls) aggregate matrix.
+
+    With spatial reuse the last zone class is the global phase that
+    quiesces every zone; a channel finishes at global + slowest zone."""
+    t = mac_times(mac, ch_bytes, ch_msgs, ch_active, bw_c)
+    if n_reuse == 1:
+        return float(t[:, 0].max())
+    return float((t[:, n_reuse] + t[:, :n_reuse].max(axis=1)).max())
+
+
 def balance(trace: TrafficTrace,
             wcfg: WirelessConfig | NetworkConfig) -> BalancerResult:
     net = as_network(wcfg)
@@ -102,6 +121,16 @@ def balance(trace: TrafficTrace,
     ch_of_node = plan.assign(trace.topo.n_nodes)
     pkt_ch = ch_of_node[trace.src]
     bw_c = plan.channel_bandwidth(net.bandwidth)
+    # zone class per packet: its source's zone when the hop span stays
+    # within the reuse distance, else the channel-global class
+    Z = plan.reuse_zones
+    n_zc = 1 if Z == 1 else Z + 1
+    if Z == 1:
+        pkt_zc = np.zeros(len(trace.nbytes), np.int64)
+    else:
+        zone_of_node, rd = plan.assign_spatial(trace.topo.config.grid,
+                                               node_grid_coords(trace.topo))
+        pkt_zc = np.where(trace.max_hops <= rd, zone_of_node[trace.src], Z)
 
     cut_mat, cut_bw = trace.cut_matrix()
     eligible = eligibility(trace, threshold=1)  # balancer sees everything
@@ -121,11 +150,12 @@ def balance(trace: TrafficTrace,
         if cand.size == 0:
             continue
         layer_loads = loads[li].copy()
-        # per-channel aggregates on this layer's wireless plane
-        ch_bytes = np.zeros(n_ch)
-        ch_msgs = np.zeros(n_ch)
-        ch_srcs = [set() for _ in range(n_ch)]
-        ch_active = np.zeros(n_ch)
+        # per-(channel, zone-class) aggregates on this layer's wireless
+        # plane (one column per channel when the plan has no reuse)
+        ch_bytes = np.zeros((n_ch, n_zc))
+        ch_msgs = np.zeros((n_ch, n_zc))
+        ch_srcs = [[set() for _ in range(n_zc)] for _ in range(n_ch)]
+        ch_active = np.zeros((n_ch, n_zc))
         remaining = list(cand)
         state_changed = True
         while remaining:
@@ -133,8 +163,7 @@ def balance(trace: TrafficTrace,
                 cut_loads = layer_loads @ cut_mat
                 hot = int((cut_loads / cut_bw).argmax())
                 t_nop = cut_loads[hot] / cut_bw[hot]
-                t_wl = float(mac_times(mac, ch_bytes, ch_msgs, ch_active,
-                                       bw_c).max())
+                t_wl = _wl_time(mac, ch_bytes, ch_msgs, ch_active, bw_c, Z)
                 if t_nop <= t_wl or t_nop <= t_rest[li]:
                     break  # balanced, or another element already dominates
                 hot_links = np.nonzero(cut_mat[:, hot])[0]
@@ -149,12 +178,17 @@ def balance(trace: TrafficTrace,
             if best_j < 0:
                 break  # nothing eligible touches the hot cut
             mi = remaining.pop(best_j)
-            ch = pkt_ch[mi]
-            # trial: this packet lands on its source's channel
-            new_bytes = ch_bytes[ch] + trace.nbytes[mi]
-            new_active = len(ch_srcs[ch] | {int(trace.src[mi])})
-            new_t_ch = float(mac_times(mac, new_bytes, ch_msgs[ch] + 1,
-                                       new_active, bw_c))
+            ch, zc = pkt_ch[mi], pkt_zc[mi]
+            # trial: this packet lands on its source's (channel, zone)
+            row_b = ch_bytes[ch].copy()
+            row_m = ch_msgs[ch].copy()
+            row_a = ch_active[ch].copy()
+            row_b[zc] += trace.nbytes[mi]
+            row_m[zc] += 1
+            row_a[zc] = len(ch_srcs[ch][zc] | {int(trace.src[mi])})
+            t_row = mac_times(mac, row_b, row_m, row_a, bw_c)
+            new_t_ch = float(t_row[0] if n_zc == 1
+                             else t_row[Z] + t_row[:Z].max())
             # accept only if the wireless plane stays the earlier
             # finisher; a rejected packet can never fit later (the wired
             # side only falls, the wireless side only rises) — drop it
@@ -162,10 +196,10 @@ def balance(trace: TrafficTrace,
             if max(t_wl, new_t_ch) > t_nop:
                 continue
             injected[mi] = True
-            ch_bytes[ch] = new_bytes
-            ch_msgs[ch] += 1
-            ch_srcs[ch].add(int(trace.src[mi]))
-            ch_active[ch] = len(ch_srcs[ch])
+            ch_bytes[ch] = row_b
+            ch_msgs[ch] = row_m
+            ch_srcs[ch][zc].add(int(trace.src[mi]))
+            ch_active[ch] = row_a
             lks = inc_link[starts[mi]:starts[mi + 1]]
             layer_loads[lks] -= trace.nbytes[mi]
             state_changed = True
@@ -181,7 +215,7 @@ def balance(trace: TrafficTrace,
     # injected set through the same stack the simulator uses
     t_wireless, wl_bytes, extra_bytes = network_layer_times(
         trace.n_layers, trace.layer, trace.nbytes, trace.src,
-        trace.topo.n_nodes, injected, net)
+        trace.topo.n_nodes, injected, net, **_geometry(trace))
     sim = _finalize(trace, loads, t_wireless)
     sim.wireless_bytes = float(wl_bytes.sum())
     sim.wireless_energy_j = wireless_energy_joules(trace, injected, net,

@@ -26,7 +26,9 @@ from repro.net.channel import ChannelPlan
 from repro.net.config import NetworkConfig
 from repro.net.mac import MacConfig
 
-from .simulator import TrafficTrace, simulate_hybrid, simulate_wired
+from .simulator import (TrafficTrace, make_trace, simulate_hybrid,
+                        simulate_wired)
+from .topology import AcceleratorConfig, node_grid_coords
 from .wireless import eligibility, injection_hash
 
 # the paper's sweep axes (shared with GridSpec's defaults)
@@ -118,6 +120,9 @@ def batched_design_space(trace: TrafficTrace,
         cut_bw=cut_bw,
         t_rest=t_rest,
         base_time=base_time,
+        max_hops=trace.max_hops,
+        grid=trace.topo.config.grid,
+        node_coords=node_grid_coords(trace.topo),
     )
     trace._batched_dse = (key, built)
     return built
@@ -256,6 +261,160 @@ def policy_sweep_all(traces: Dict[str, TrafficTrace],
                      ) -> List[PolicySweepResult]:
     return [policy_sweep(tr, wl, net, policies)
             for wl, tr in traces.items()]
+
+
+# ---------------------------------------------------------------------------
+# the scale-out frontier: large meshes x spatial channel reuse
+# ---------------------------------------------------------------------------
+
+# mesh sizes of the scaling study (3x3 is the paper's baseline point)
+SCALING_GRIDS = ((4, 4), (6, 6), (8, 8), (12, 12), (16, 16))
+
+
+def scaled_config(grid: Tuple[int, int], n_dram: int | None = None,
+                  base: AcceleratorConfig | None = None) -> AcceleratorConfig:
+    """Weak-scaled platform: Table-1 per-chiplet resources on an RxC mesh.
+
+    Every per-chiplet rate (compute, NoC, NoP link, DRAM module pin
+    rate) keeps its paper value; the package totals scale with the
+    chiplet count, and the DRAM module count scales with the perimeter
+    (four per full 4-chiplet side span, so a 16x16 package carries 16
+    modules).  The *wireless* band does NOT scale — that is the
+    experiment: a single shared medium serves ever more transmitters,
+    which is exactly where spatial reuse earns its keep.
+    """
+    rows, cols = grid
+    base = base or AcceleratorConfig()
+    if n_dram is None:
+        n_dram = max(4, 4 * (-(-max(rows, cols) // 4)))
+    per_chip = base.tops_total / (base.grid[0] * base.grid[1])
+    return dataclasses.replace(
+        base, grid=(rows, cols), n_dram=n_dram,
+        tops_total=per_chip * rows * cols,
+        # per-chiplet vectors are geometry-bound; a scaled mesh restarts
+        # from the uniform package
+        chiplet_tops=None, chiplet_noc_bw=None, chiplet_sram=None,
+        chiplet_pj_per_mac=None, chiplet_pj_per_bit_noc=None)
+
+
+def reuse_plans(grid: Tuple[int, int],
+                n_channels: int = 1) -> Tuple[ChannelPlan, ...]:
+    """Candidate spatial-reuse plans for one mesh: zone tiles of 4 and 2.
+
+    Coarse tiles keep more traffic zone-local (large reuse distance);
+    fine tiles buy more concurrent zones.  The scaling sweep evaluates
+    both and reports the better — on a mesh too small to tile (3x3,
+    4x4 with tile 4) the list may be empty: there is nothing to reuse.
+    """
+    rows, cols = grid
+    plans = []
+    seen = set()
+    for tile in (4, 2):
+        zones = (-(-rows // tile)) * (-(-cols // tile))
+        if zones > 1 and zones not in seen:
+            seen.add(zones)
+            plans.append(ChannelPlan(n_channels, reuse_zones=zones))
+    return tuple(plans)
+
+
+@dataclasses.dataclass
+class ScalingResult:
+    """One (mesh, workload) point of the scale-out frontier."""
+
+    workload: str
+    grid: Tuple[int, int]
+    n_chiplets: int
+    wired_time: float
+    best_single: float            # best speedup, single shared channel
+    best_reuse: float             # best speedup over the reuse plans
+    best_reuse_plan: str          # describe() of the winning plan ("1ch"
+    #                               when no reuse plan fits the mesh)
+
+    @property
+    def recovered(self) -> float:
+        """Speedup the reuse plans recover over the shared channel."""
+        return self.best_reuse - self.best_single
+
+
+def scaling_sweep(workloads=None, grids=SCALING_GRIDS,
+                  bandwidth_gbps: float = 96,
+                  engine: str = "batched") -> List[ScalingResult]:
+    """The scale-out frontier: (mesh size x wireless plan) per workload.
+
+    For every mesh in ``grids`` (weak-scaled via `scaled_config`) and
+    every workload, sweep the paper's (threshold x injection) grid for
+    (i) the single shared wireless channel and (ii) the spatial-reuse
+    plans of `reuse_plans`, and report the best speedup of each — the
+    frontier showing where the global serialization point collapses and
+    how much of the speedup distance-gated reuse recovers.
+
+    ``engine="batched"`` (default) evaluates each (mesh, workload) grid
+    in one vectorized pass; ``engine="loop"`` runs the naive per-point
+    `simulate_hybrid` double loop (identical results, >=10x slower —
+    the contrast is pinned in tests/test_scaling.py).  Workload names
+    may be paper workloads or LLM frontier names ("<model>:<phase>").
+    """
+    if engine not in ("batched", "loop"):
+        raise ValueError(f"unknown engine {engine!r}; use 'batched' or 'loop'")
+    if workloads is None:
+        from .workloads import WORKLOADS
+        workloads = list(WORKLOADS)
+    out = []
+    for grid in grids:
+        acc = scaled_config(tuple(grid))
+        plans = (ChannelPlan(1),) + reuse_plans(tuple(grid))
+        spec = GridSpec(bandwidths_gbps=(bandwidth_gbps,), plans=plans)
+        for wl in workloads:
+            trace = make_trace(wl, acc)
+            if engine == "batched":
+                res = batched_design_space(trace).evaluate(spec)
+                sp = res.speedup[0, :, 0]            # (plan, thr, inj)
+                base = res.base_time
+            else:
+                base = simulate_wired(trace).total_time
+                sp = np.empty((len(plans), len(spec.thresholds),
+                               len(spec.injections)))
+                for pi, plan in enumerate(plans):
+                    for ti, thr in enumerate(spec.thresholds):
+                        for ii, p in enumerate(spec.injections):
+                            cfg = NetworkConfig(
+                                bandwidth=bandwidth_gbps * 1e9 / 8,
+                                distance_threshold=thr, injection_prob=p,
+                                channels=plan)
+                            sp[pi, ti, ii] = base / simulate_hybrid(
+                                trace, cfg).total_time
+            best_single = float(sp[0].max())
+            if len(plans) > 1:
+                ri = 1 + int(sp[1:].reshape(len(plans) - 1, -1)
+                             .max(axis=1).argmax())
+                best_reuse, plan_desc = float(sp[ri].max()), \
+                    plans[ri].describe()
+            else:
+                best_reuse, plan_desc = best_single, plans[0].describe()
+            out.append(ScalingResult(
+                workload=wl, grid=tuple(grid),
+                n_chiplets=acc.n_chiplets,
+                wired_time=base,
+                best_single=best_single, best_reuse=best_reuse,
+                best_reuse_plan=plan_desc))
+    return out
+
+
+def scaling_summary(results: List[ScalingResult]
+                    ) -> Dict[str, Dict[str, float]]:
+    """Per-mesh aggregates of a `scaling_sweep` run."""
+    out: Dict[str, Dict[str, float]] = {}
+    for grid in sorted({r.grid for r in results}):
+        rs = [r for r in results if r.grid == grid]
+        out[f"{grid[0]}x{grid[1]}"] = {
+            "mean_single": float(np.mean([r.best_single for r in rs])),
+            "max_single": float(np.max([r.best_single for r in rs])),
+            "mean_reuse": float(np.mean([r.best_reuse for r in rs])),
+            "max_reuse": float(np.max([r.best_reuse for r in rs])),
+            "mean_recovered": float(np.mean([r.recovered for r in rs])),
+            "n": len(rs),
+        }
+    return out
 
 
 def hetero_sweep(workloads=None,

@@ -25,7 +25,7 @@ from repro.net.config import NetworkConfig, as_network
 from repro.net.stack import network_layer_times
 
 from .mapper import pipeline_mapping, spatial_mapping
-from .topology import AcceleratorConfig, build_topology
+from .topology import AcceleratorConfig, build_topology, node_grid_coords
 from .traffic import TrafficTrace, build_trace
 from .wireless import WirelessConfig, select_wireless, wireless_energy_joules
 from .workloads import get_workload
@@ -158,10 +158,14 @@ def simulate_hybrid(trace: TrafficTrace,
     )
 
     # wireless plane: per-channel MAC-costed service, max over channels
+    # — per (channel, zone class) under a spatial-reuse plan
     # (degenerate 1-channel ideal plan == the paper's volume/bandwidth)
     t_wireless, wl_bytes, extra_bytes = network_layer_times(
         trace.n_layers, trace.layer, trace.nbytes, trace.src,
-        trace.topo.n_nodes, injected, net)
+        trace.topo.n_nodes, injected, net,
+        grid=trace.topo.config.grid,
+        node_coords=node_grid_coords(trace.topo),
+        max_hops=trace.max_hops)
 
     res = _finalize(trace, loads, t_wireless)
     res.wireless_bytes = float(wl_bytes.sum())

@@ -1,14 +1,17 @@
 """Package-scale topology for the wireless-enabled multi-chiplet accelerator.
 
-Faithful to the paper's Table 1 platform: a GxG grid of compute chiplets
-(3x3 by default), four DRAM chiplets on the package periphery, an XY-mesh
-NoP between chiplets, an XY-mesh NoC inside each chiplet, and one antenna +
-transceiver at the geometric center of every compute chiplet and DRAM
-module (paper SIII-B1).
+Faithful to the paper's Table 1 platform: an RxC grid of compute chiplets
+(3x3 by default, arbitrary — and non-square — grids up to 16x16 and
+beyond for the scale-out frontier), DRAM chiplets on the package
+periphery, an XY-mesh NoP between chiplets, an XY-mesh NoC inside each
+chiplet, and one antenna + transceiver at the geometric center of every
+compute chiplet and DRAM module (paper SIII-B1).
 
 Distances are expressed in NoP hops (the unit the paper's distance
 threshold uses).  Antenna coordinates are derived from the physical layout
-so the wireless plane is single-hop between any two antennas.
+so the wireless plane is single-hop between any two antennas.  All-pairs
+hop distances are available vectorized (`Topology.hop_matrix`) — large
+meshes cost the route walk once, not per message.
 """
 
 from __future__ import annotations
@@ -16,6 +19,8 @@ from __future__ import annotations
 import dataclasses
 import itertools
 from typing import Dict, List, Tuple
+
+import numpy as np
 
 Coord = Tuple[int, int]
 
@@ -25,11 +30,13 @@ class AcceleratorConfig:
     """Platform parameters (paper Table 1 defaults).
 
     Rates are bytes/second internally; the paper quotes Gb/s for NoC/NoP/
-    wireless and GB/s for DRAM.
+    wireless and GB/s for DRAM.  Construction validates the package
+    geometry — a mismatched per-chiplet vector or an impossible grid
+    fails HERE with a clear message, not deep inside `build_trace`.
     """
 
     grid: Tuple[int, int] = (3, 3)          # compute chiplets
-    n_dram: int = 4                          # DRAM chiplets (one per side)
+    n_dram: int = 4                          # DRAM chiplets on the perimeter
     tops_total: float = 144e12               # 144 TOPS across the package
     dram_bw_per_chiplet: float = 16e9        # 16 GB/s per DRAM chiplet
     nop_bw_per_side: float = 32e9 / 8        # 32 Gb/s per mesh side -> B/s
@@ -51,6 +58,31 @@ class AcceleratorConfig:
     chiplet_sram: Tuple[int, ...] | None = None           # weight-SRAM bytes
     chiplet_pj_per_mac: Tuple[float, ...] | None = None
     chiplet_pj_per_bit_noc: Tuple[float, ...] | None = None
+
+    def __post_init__(self):
+        ints = (int, np.integer)   # numpy ints (e.g. from array axes) count
+        rows, cols = (self.grid if isinstance(self.grid, tuple)
+                      and len(self.grid) == 2 else (0, 0))
+        if not (isinstance(rows, ints) and isinstance(cols, ints)
+                and rows >= 1 and cols >= 1):
+            raise ValueError(
+                f"grid must be a (rows, cols) tuple of positive ints, "
+                f"got {self.grid!r}")
+        if not (isinstance(self.n_dram, ints) and self.n_dram >= 1):
+            raise ValueError(
+                f"n_dram must be a positive int, got {self.n_dram!r}")
+        n = rows * cols
+        for field in ("chiplet_tops", "chiplet_noc_bw", "chiplet_sram",
+                      "chiplet_pj_per_mac", "chiplet_pj_per_bit_noc"):
+            v = getattr(self, field)
+            if v is None:
+                continue
+            if len(v) != n:
+                raise ValueError(
+                    f"{field} must have one entry per chiplet "
+                    f"({rows}x{cols} grid -> {n}), got {len(v)}")
+            if any(x <= 0 for x in v):
+                raise ValueError(f"{field} entries must be positive")
 
     @property
     def n_chiplets(self) -> int:
@@ -132,7 +164,44 @@ class Topology:
 
     def nop_hops(self, a: int, b: int) -> int:
         """XY-route hop distance between two nodes (DRAM attach-aware)."""
-        return len(self.route(a, b))
+        return int(self.hop_matrix()[a, b])
+
+    def hop_matrix(self) -> np.ndarray:
+        """All-pairs XY hop distances, (n_nodes, n_nodes), cached.
+
+        Chiplet-chiplet distance is Manhattan on the grid.  A DRAM module
+        attaches to every edge router along its package side (see
+        `route`), so the distance to/from a DRAM is the perpendicular
+        distance to that side — vectorized here so large meshes pay one
+        array pass instead of a per-pair route walk.
+        """
+        cached = getattr(self, "_hop_matrix", None)
+        if cached is not None:
+            return cached
+        rows, cols = self.config.grid
+        n_chip = len(self.chiplet_coords)
+        coords = np.array(self.chiplet_coords, np.int64)      # (n_chip, 2)
+        h = np.abs(coords[:, None, :] - coords[None, :, :]).sum(axis=2)
+        n = self.n_nodes
+        hops = np.zeros((n, n), np.int64)
+        hops[:n_chip, :n_chip] = h
+        # chiplet <-> DRAM: one virtual coordinate is off-grid; the route
+        # enters at the edge router aligned with the chiplet, so only the
+        # perpendicular axis contributes.
+        for j, (rd, cd) in enumerate(self.dram_coords):
+            if 0 <= rd < rows:          # left/right side: column distance
+                d = np.abs(coords[:, 1] - min(max(cd, 0), cols - 1))
+            else:                        # top/bottom side: row distance
+                d = np.abs(coords[:, 0] - min(max(rd, 0), rows - 1))
+            hops[:n_chip, n_chip + j] = d
+            hops[n_chip + j, :n_chip] = d
+        # DRAM <-> DRAM (unused by traffic, kept route-exact for takers)
+        for a in range(n_chip, n):
+            for b in range(n_chip, n):
+                if a != b:
+                    hops[a, b] = len(self.route(a, b))
+        object.__setattr__(self, "_hop_matrix", hops)
+        return hops
 
     def multicast_route(self, src: int, dsts: List[int],
                         order: str = "xy") -> List[Tuple[Coord, Coord]]:
@@ -156,14 +225,36 @@ class Topology:
         return self.dram_coords[node - n_chip]
 
 
+def dram_positions(rows: int, cols: int, n_dram: int) -> Tuple[Coord, ...]:
+    """Perimeter DRAM placement, parametric in the module count.
+
+    Up to four modules reproduce the paper's Fig. 1 exactly: one centred
+    per package side, in the fixed side order (top, bottom, left, right).
+    Beyond four — large-mesh packages need the aggregate DRAM bandwidth
+    to scale with the perimeter — modules are dealt round-robin over the
+    four sides and spread evenly along each side, so an `n_dram = 16`
+    16x16 package gets four evenly-spaced modules per side.
+    """
+    mid_r, mid_c = rows // 2, cols // 2
+    legacy = ((-1, mid_c), (rows, mid_c), (mid_r, -1), (mid_r, cols))
+    if n_dram <= 4:
+        return legacy[:n_dram]
+    per_side = [n_dram // 4 + (s < n_dram % 4) for s in range(4)]
+    out: List[Coord] = []
+    for side, k in enumerate(per_side):
+        span = cols if side < 2 else rows
+        for i in range(k):
+            pos = (2 * i + 1) * span // (2 * k)      # evenly spaced centres
+            out.append(((-1, pos), (rows, pos),
+                        (pos, -1), (pos, cols))[side])
+    return tuple(out)
+
+
 def build_topology(config: AcceleratorConfig | None = None) -> Topology:
     cfg = config or AcceleratorConfig()
     rows, cols = cfg.grid
     chiplets = tuple(itertools.product(range(rows), range(cols)))
-
-    # Four DRAM chiplets: one centred on each package side (paper Fig. 1).
-    mid_r, mid_c = rows // 2, cols // 2
-    dram = ((-1, mid_c), (rows, mid_c), (mid_r, -1), (mid_r, cols))[: cfg.n_dram]
+    dram = dram_positions(rows, cols, cfg.n_dram)
 
     # Antenna at the centre of every chiplet / DRAM (paper SIII-B1): physical
     # coordinates derived from grid position and chiplet pitch.
@@ -176,13 +267,33 @@ def build_topology(config: AcceleratorConfig | None = None) -> Topology:
 
 
 def nearest_dram(topo: Topology, chiplet: int) -> int:
-    """DRAM node id (global) closest to a chiplet, used for weight fetch."""
-    n_chip = len(topo.chiplet_coords)
-    best = min(
-        range(n_chip, n_chip + len(topo.dram_coords)),
-        key=lambda d: topo.nop_hops(chiplet, d),
-    )
-    return best
+    """DRAM node id (global) closest to a chiplet, used for weight fetch.
+
+    Ties break toward the lowest node id (the legacy `min` order);
+    computed once for the whole package from the hop matrix and cached —
+    the traffic generator calls this per spill message.
+    """
+    cached = getattr(topo, "_nearest_dram", None)
+    if cached is None:
+        n_chip = len(topo.chiplet_coords)
+        cached = n_chip + topo.hop_matrix()[:n_chip, n_chip:].argmin(axis=1)
+        object.__setattr__(topo, "_nearest_dram", cached)
+    return int(cached[chiplet])
+
+
+def node_grid_coords(topo: Topology) -> np.ndarray:
+    """(n_nodes, 2) int grid coordinates, DRAM virtual coords clamped.
+
+    The spatial channel-reuse model (`repro.net.channel`) tiles the
+    package into interference zones by grid position; DRAM modules are
+    clamped onto their adjacent edge row/column so every node lands in
+    a zone.
+    """
+    rows, cols = topo.config.grid
+    coords = np.array(topo.chiplet_coords + topo.dram_coords, np.int64)
+    coords[:, 0] = np.clip(coords[:, 0], 0, rows - 1)
+    coords[:, 1] = np.clip(coords[:, 1], 0, cols - 1)
+    return coords
 
 
 def chiplet_neighbourhood(topo: Topology) -> Dict[int, List[int]]:

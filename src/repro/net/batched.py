@@ -93,11 +93,12 @@ class GridResult:
         return float(self.speedup[mi, pi, bi, ti, ii]), cfg
 
     def ideal_grid(self, bandwidth_gbps: float) -> np.ndarray:
-        """(threshold, injection) speedup grid for ideal MAC, 1 channel."""
+        """(threshold, injection) speedup grid for the paper's network:
+        ideal MAC, one channel, no spatial reuse."""
         mi = next(i for i, m in enumerate(self.spec.macs)
                   if m.protocol == "ideal")
         pi = next(i for i, p in enumerate(self.spec.plans)
-                  if p.n_channels == 1)
+                  if p.n_channels == 1 and p.reuse_zones == 1)
         bi = self.spec.bandwidths_gbps.index(bandwidth_gbps)
         return self.speedup[mi, pi, bi]
 
@@ -118,13 +119,19 @@ class BatchedDesignSpace:
     - ``t_rest``: (L,) wireless-independent floor
       ``max(compute, dram, noc)``.
     - ``base_time``: wired baseline total time (speedup denominator).
+    - ``max_hops``/``grid``/``node_coords``: per-packet NoP hop span and
+      the package geometry — only needed when a `GridSpec` plan uses
+      spatial reuse (``reuse_zones > 1``), which gates packets on hop
+      span and zones nodes by grid position.
     """
 
     def __init__(self, *, n_layers: int, n_nodes: int, layer: np.ndarray,
                  nbytes: np.ndarray, src: np.ndarray,
                  eligibility: Dict[int, np.ndarray], inj_hash: np.ndarray,
                  pkt_cut: np.ndarray, cut_base: np.ndarray,
-                 cut_bw: np.ndarray, t_rest: np.ndarray, base_time: float):
+                 cut_bw: np.ndarray, t_rest: np.ndarray, base_time: float,
+                 max_hops: np.ndarray | None = None, grid=None,
+                 node_coords: np.ndarray | None = None):
         self.n_layers = n_layers
         self.n_nodes = n_nodes
         self.layer = np.asarray(layer, np.int64)
@@ -138,17 +145,42 @@ class BatchedDesignSpace:
         self.cut_bw = np.asarray(cut_bw, float)
         self.t_rest = np.asarray(t_rest, float)
         self.base_time = float(base_time)
-        # (layer, src) transmitter groups, fixed per trace: sorted packet
-        # order + segment starts for min-bucket reductions.
-        key = self.layer * n_nodes + self.src
-        self._grp_order = np.argsort(key, kind="stable")
-        sorted_key = key[self._grp_order]
+        self.max_hops = None if max_hops is None \
+            else np.asarray(max_hops, np.int64)
+        self.grid = None if grid is None else tuple(grid)
+        self.node_coords = None if node_coords is None \
+            else np.asarray(node_coords, np.int64)
+        # transmitter-group structures ((layer, src[, locality]) sorted
+        # packet order + segment starts for min-bucket reductions),
+        # cached by the reuse distance that splits local from global
+        self._grp_cache: Dict[int | None, tuple] = {}
+
+    def _groups(self, local: np.ndarray | None, cache_key):
+        """Sorted transmitter groups, optionally split by reuse locality.
+
+        Returns ``(order, starts, g_layer, g_src, g_local)`` where the
+        ``g_*`` arrays describe each distinct (layer, src[, local])
+        transmitter group; ``g_local`` is None without a locality split.
+        """
+        if cache_key in self._grp_cache:
+            return self._grp_cache[cache_key]
+        key = self.layer * self.n_nodes + self.src
+        if local is not None:
+            key = key * 2 + local
+        order = np.argsort(key, kind="stable")
+        sorted_key = key[order]
         first = np.ones(len(sorted_key), bool)
         first[1:] = sorted_key[1:] != sorted_key[:-1]
-        self._grp_starts = np.nonzero(first)[0]
-        gkey = sorted_key[self._grp_starts]
-        self._grp_layer = gkey // n_nodes
-        self._grp_src = gkey % n_nodes
+        starts = np.nonzero(first)[0]
+        gkey = sorted_key[starts]
+        g_local = None
+        if local is not None:
+            g_local = (gkey % 2).astype(bool)
+            gkey = gkey // 2
+        out = (order, starts, gkey // self.n_nodes, gkey % self.n_nodes,
+               g_local)
+        self._grp_cache[cache_key] = out
+        return out
 
     # ------------------------------------------------------------------
     # bucketed cumulative aggregates
@@ -200,38 +232,60 @@ class BatchedDesignSpace:
             residual = self.cut_base.T[:, :, None] - removed
             t_nop[ti] = (residual / self.cut_bw[:, None, None]).max(axis=0)
 
-        # --- wireless plane: per-plan (bytes, msgs, active) aggregates ---
-        # msgs/active only matter to non-ideal MACs; skip them otherwise
+        # --- wireless plane: per-plan (bytes, msgs, active) aggregates,
+        # with a zone-class axis (0..Z-1 zone-local, Z global) when the
+        # plan spatially reuses the band; msgs/active only matter to
+        # non-ideal MACs and are skipped otherwise ---
         need_counts = any(m.protocol != "ideal" for m in spec.macs)
-        if need_counts:
-            # a transmitter group is active from the earliest bucket of
-            # its eligible packets (plan-independent)
-            bmin = [np.minimum.reduceat(
-                np.where(e, bucket, NI)[self._grp_order], self._grp_starts)
-                for e in elig]
+        bmin_cache: Dict[tuple, np.ndarray] = {}
         per_plan = []
         for plan in spec.plans:
             n_ch = plan.n_channels
             ch_of_node = plan.assign(self.n_nodes)
+            Z = plan.reuse_zones
+            if Z == 1:
+                nz, zcls, rd = 1, 0, None
+                order, starts, g_lay, g_src, g_loc = self._groups(None, None)
+                g_zc = 0
+            else:
+                if self.grid is None or self.node_coords is None \
+                        or self.max_hops is None:
+                    raise ValueError(
+                        "plans with reuse_zones > 1 need the package "
+                        "geometry; build the design space with max_hops, "
+                        "grid and node_coords")
+                zone_of_node, rd = plan.assign_spatial(self.grid,
+                                                       self.node_coords)
+                local = self.max_hops <= rd
+                nz = Z + 1
+                zcls = np.where(local, zone_of_node[self.src], Z)
+                order, starts, g_lay, g_src, g_loc = self._groups(local, rd)
+                g_zc = np.where(g_loc, zone_of_node[g_src], Z)
             ch = ch_of_node[self.src]
-            gch = ch_of_node[self._grp_src]
-            by = np.empty((NT, L, n_ch, NI))
+            seg_all = (self.layer * n_ch + ch) * nz + zcls
+            by = np.empty((NT, L, n_ch, nz, NI))
             ms = ac = None
             if need_counts:
-                ms = np.empty((NT, L, n_ch, NI))
-                ac = np.empty((NT, L, n_ch, NI))
-            gseg = self._grp_layer * n_ch + gch
+                ms = np.empty((NT, L, n_ch, nz, NI))
+                ac = np.empty((NT, L, n_ch, nz, NI))
+            gseg = (g_lay * n_ch + ch_of_node[g_src]) * nz + g_zc
             for ti, e in enumerate(elig):
-                seg = (self.layer * n_ch + ch)[e]
-                by[ti] = self._cum(seg, L * n_ch, bucket[e], NI,
+                seg = seg_all[e]
+                by[ti] = self._cum(seg, L * n_ch * nz, bucket[e], NI,
                                    weights=self.nbytes[e]) \
-                    .reshape(L, n_ch, NI)
+                    .reshape(L, n_ch, nz, NI)
                 if need_counts:
-                    ms[ti] = self._cum(seg, L * n_ch, bucket[e], NI,
-                                       weights=None).reshape(L, n_ch, NI)
-                    ac[ti] = self._cum(gseg, L * n_ch, bmin[ti], NI) \
-                        .reshape(L, n_ch, NI)
-            per_plan.append((by, ms, ac))
+                    ms[ti] = self._cum(seg, L * n_ch * nz, bucket[e], NI,
+                                       weights=None).reshape(L, n_ch, nz, NI)
+                    # a transmitter group is active from the earliest
+                    # bucket of its eligible packets
+                    bk = (rd, ti)
+                    if bk not in bmin_cache:
+                        bmin_cache[bk] = np.minimum.reduceat(
+                            np.where(e, bucket, NI)[order], starts)
+                    ac[ti] = self._cum(gseg, L * n_ch * nz, bmin_cache[bk],
+                                       NI).reshape(L, n_ch, nz, NI)
+            per_plan.append((by, ms, ac, Z, nz))
 
         # --- closed-form assembly over (mac, plan, bandwidth) ---
         shape = (len(spec.macs), len(spec.plans), len(spec.bandwidths_gbps),
@@ -240,10 +294,15 @@ class BatchedDesignSpace:
         floor = np.maximum(self.t_rest[None, :, None], t_nop)  # (NT, L, NI)
         for mi, mac in enumerate(spec.macs):
             for pi, plan in enumerate(spec.plans):
-                by, ms, ac = per_plan[pi]
+                by, ms, ac, Z, nz = per_plan[pi]
                 for bi, bw in enumerate(spec.bandwidths_gbps):
                     bw_c = plan.channel_bandwidth(bw * 1e9 / 8)
-                    t_wl = mac_times(mac, by, ms, ac, bw_c).max(axis=2)
+                    t = mac_times(mac, by, ms, ac, bw_c)
+                    if nz == 1:
+                        t_ch = t[..., 0, :]
+                    else:   # global phase + concurrent zone-local phases
+                        t_ch = t[..., Z, :] + t[..., :Z, :].max(axis=3)
+                    t_wl = t_ch.max(axis=2)
                     total[mi, pi, bi] = np.maximum(floor, t_wl).sum(axis=1)
         return GridResult(spec, self.base_time, total,
                           self.base_time / total)

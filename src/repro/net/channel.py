@@ -1,14 +1,26 @@
-"""Wireless channel plane: single shared channel or FDM multi-channel.
+"""Wireless channel plane: shared channel, FDM multi-channel, and
+distance-gated spatial reuse.
 
 The paper's platform has one antenna per chiplet/DRAM module tuned to a
 single shared frequency band; serialization per layer is one global
-`volume / bandwidth` term.  Graphene-class agile transceivers motivate
-splitting the band into several frequency channels with each node's
-transmitter tuned to its zone's channel: transmissions on different
-channels proceed concurrently, so the per-layer wireless time becomes a
-per-channel max instead of one global sum.
+`volume / bandwidth` term.  Two orthogonal ways out of that global
+serialization point:
 
-Zone assignment policies (node id -> channel):
+- **Frequency division** (graphene-class agile transceivers): split the
+  band into several channels with each node's transmitter tuned to its
+  zone's channel.  Transmissions on different channels proceed
+  concurrently, so the per-layer wireless time becomes a per-channel
+  max instead of one global sum.
+- **Spatial reuse** (the standard answer for *large* meshes, where even
+  a per-channel population saturates): tile the package into
+  ``reuse_zones`` spatially-separated interference zones.  A
+  transmission whose NoP hop span stays within ``reuse_distance`` only
+  occupies its source's zone — zones transmit concurrently on the SAME
+  frequency; a longer-range transmission is heard across zones and
+  serializes globally on its channel.  Per (layer, channel) the service
+  time becomes ``t(global) + max_z t(zone z)``.
+
+Zone assignment policies (node id -> frequency channel):
 
 - ``contiguous``: equal blocks of consecutive node ids.  Matches a
   physical-layout zoning (neighbouring chiplets share a channel), which
@@ -17,13 +29,19 @@ Zone assignment policies (node id -> channel):
   (and therefore usually co-active) transmitters across channels, which
   balances per-channel load for pipeline mappings.
 
-``n_channels == 1`` reproduces today's single-channel behaviour
-bit-for-bit regardless of policy.
+Spatial zones are assigned by *grid position* (`assign_spatial`): the
+package is tiled into a near-aspect-matched ``kr x kc`` factorization of
+``reuse_zones``, and every node (DRAM modules clamped onto their edge)
+belongs to the tile it sits in.
+
+``n_channels == 1, reuse_zones == 1`` reproduces the paper's
+single-shared-medium behaviour bit-for-bit regardless of policy.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Tuple
 
 import numpy as np
 
@@ -32,23 +50,39 @@ POLICIES = ("contiguous", "interleaved")
 
 @dataclasses.dataclass(frozen=True)
 class ChannelPlan:
-    """Frequency-division plan for the wireless plane.
+    """Frequency-division + spatial-reuse plan for the wireless plane.
 
     ``bandwidth_per_channel=None`` divides the aggregate wireless
     bandwidth evenly, i.e. the comparison against the single shared
     channel is at equal aggregate bandwidth.  A float pins each
     channel's rate instead (aggregate then scales with ``n_channels``).
+
+    ``reuse_zones`` (K) tiles the package into K spatial interference
+    zones that transmit concurrently; ``reuse_distance`` is the NoP hop
+    span up to which a transmission stays local to its source's zone
+    (``None`` derives the zone-tile diameter, so exactly the
+    transmissions that fit inside one tile-sized neighbourhood reuse
+    the band).  ``reuse_zones == 1`` is the single shared medium — the
+    gate is moot and every transmission is zone-local by construction.
     """
 
     n_channels: int = 1
     policy: str = "contiguous"
     bandwidth_per_channel: float | None = None
+    reuse_zones: int = 1
+    reuse_distance: int | None = None
 
     def __post_init__(self):
         if self.n_channels < 1:
             raise ValueError(f"n_channels must be >= 1, got {self.n_channels}")
         if self.policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}")
+        if self.reuse_zones < 1:
+            raise ValueError(
+                f"reuse_zones must be >= 1, got {self.reuse_zones}")
+        if self.reuse_distance is not None and self.reuse_distance < 0:
+            raise ValueError(
+                f"reuse_distance must be >= 0, got {self.reuse_distance}")
 
     def channel_bandwidth(self, aggregate_bw: float) -> float:
         """Per-channel service rate in B/s."""
@@ -57,7 +91,7 @@ class ChannelPlan:
         return aggregate_bw / self.n_channels
 
     def assign(self, n_nodes: int) -> np.ndarray:
-        """Channel id per node (compute chiplets then DRAM modules)."""
+        """Frequency channel id per node (compute chiplets then DRAM)."""
         nodes = np.arange(n_nodes)
         if self.n_channels == 1:
             return np.zeros(n_nodes, np.int64)
@@ -67,7 +101,52 @@ class ChannelPlan:
         return np.minimum(nodes * self.n_channels // max(n_nodes, 1),
                           self.n_channels - 1)
 
+    def zone_tiling(self, grid: Tuple[int, int]) -> Tuple[int, int]:
+        """``(kr, kc)`` zone-tile factorization of ``reuse_zones``.
+
+        Picks the divisor pair closest to the grid's aspect ratio so
+        non-square grids tile sensibly; raises if no divisor pair fits
+        inside the grid (e.g. 5 zones on a 2x8 mesh).
+        """
+        rows, cols = grid
+        K = self.reuse_zones
+        pairs = [(d, K // d) for d in range(1, K + 1)
+                 if K % d == 0 and d <= rows and K // d <= cols]
+        if not pairs:
+            raise ValueError(
+                f"reuse_zones={K} has no (kr x kc) factorization fitting "
+                f"a {rows}x{cols} grid")
+        return min(pairs, key=lambda p: abs(p[0] / p[1] - rows / cols))
+
+    def assign_spatial(self, grid: Tuple[int, int],
+                       coords: np.ndarray) -> Tuple[np.ndarray, int]:
+        """``(zone_of_node, reuse_distance)`` for one package geometry.
+
+        ``coords`` is the (n_nodes, 2) array of integer grid positions
+        (DRAM modules clamped onto their edge —
+        `repro.core.topology.node_grid_coords`).  The derived
+        ``reuse_distance`` is the zone-tile Manhattan diameter; with a
+        single zone that is the whole-package diameter, so every
+        transmission classifies as zone-local and the plan degenerates
+        to the shared medium exactly.
+        """
+        rows, cols = grid
+        kr, kc = self.zone_tiling(grid)
+        coords = np.asarray(coords, np.int64)
+        zone = ((coords[:, 0] * kr // rows) * kc
+                + coords[:, 1] * kc // cols)
+        rd = self.reuse_distance
+        if rd is None or self.reuse_zones == 1:
+            # tile diameter: ceil(rows/kr) - 1 + ceil(cols/kc) - 1.  A
+            # single zone's tile is the whole package, whose diameter
+            # bounds every route — the gate never fires (and an explicit
+            # reuse_distance is ignored: one zone IS the shared medium).
+            rd = (-(-rows // kr) - 1) + (-(-cols // kc) - 1)
+        return zone, int(rd)
+
     def describe(self) -> str:
-        if self.n_channels == 1:
-            return "1ch"
-        return f"{self.n_channels}ch-{self.policy}"
+        s = "1ch" if self.n_channels == 1 \
+            else f"{self.n_channels}ch-{self.policy}"
+        if self.reuse_zones > 1:
+            s += f"-x{self.reuse_zones}reuse"
+        return s

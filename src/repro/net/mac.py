@@ -104,10 +104,12 @@ def mac_extra_bytes(mac: MacConfig, nbytes, msgs, active):
 # - ``ideal``: ``v / B`` — summing over a layer reproduces the aggregate
 #   exactly, so the event engine is bit-compatible with the paper model.
 # - ``tdma``: every packet occupies ``ceil(v / slot)`` whole slots (its
-#   tail slot is padded) plus the guard per slot.  The layer sum is
-#   >= the aggregate form (which pads one tail per *transmitter*, not
-#   per packet) — the event model resolves the padding the analytic
-#   model amortises.
+#   tail slot is padded) plus the guard per slot.  Neither form bounds
+#   the other: the event model resolves per-packet padding the
+#   aggregate amortises (event higher on fragmented traffic), while
+#   the aggregate pessimistically pads one tail per *transmitter*
+#   (aggregate higher on slot-aligned traffic).  Both dominate the
+#   ideal MAC pointwise.
 # - ``token``: each transmission first waits for the circulating token,
 #   ``active`` station hops away — where ``active`` is the number of
 #   stations holding traffic on the channel *at that moment*, which the

@@ -2,13 +2,22 @@
 
 Given the flat per-packet arrays of a traffic trace and the boolean
 injected set chosen by the paper's decision function, aggregate the
-wireless traffic per (layer, channel), cost each channel under the MAC
+wireless traffic per (layer, channel) — and, under a spatial-reuse plan,
+per (layer, channel, zone class) — cost each channel under the MAC
 protocol, and return the per-layer wireless time as the max over the
 concurrently operating channels.
 
-With the degenerate plan (1 channel, ideal MAC) this is exactly the
-paper's `volume / bandwidth` term, summed in the same packet order as
-the legacy `np.add.at` implementation.
+Reuse costing (`ChannelPlan.reuse_zones > 1`): each packet classifies as
+*zone-local* (hop span within the plan's ``reuse_distance``; occupies
+its source's zone only) or *global* (heard package-wide; serializes
+against every zone of its channel).  A channel's layer time is
+
+    t = t_mac(global traffic) + max over zones of t_mac(zone traffic)
+
+— the global phase quiesces all zones, the local phases run
+concurrently.  With the degenerate plan (1 channel, 1 zone, ideal MAC)
+this is exactly the paper's `volume / bandwidth` term, summed in the
+same packet order as the legacy `np.add.at` implementation.
 """
 
 from __future__ import annotations
@@ -23,43 +32,81 @@ from .mac import mac_extra_bytes, mac_times
 
 def channel_aggregates(n_layers: int, layer: np.ndarray, nbytes: np.ndarray,
                        src: np.ndarray, ch_of_node: np.ndarray,
-                       n_channels: int,
-                       injected: np.ndarray) -> Tuple[np.ndarray, np.ndarray,
-                                                      np.ndarray]:
-    """(bytes, msgs, active) aggregates, each (n_layers, n_channels)."""
+                       n_channels: int, injected: np.ndarray,
+                       zcls: np.ndarray | None = None,
+                       n_zcls: int = 1) -> Tuple[np.ndarray, np.ndarray,
+                                                 np.ndarray]:
+    """(bytes, msgs, active) aggregates for the injected set.
+
+    Without ``zcls`` each is (n_layers, n_channels) — the legacy shape.
+    With a per-packet zone-class array (0..K-1 zone-local, K global)
+    each is (n_layers, n_channels, n_zcls); ``active`` counts distinct
+    (layer, source, zone-class) transmitter appearances, since one
+    source can hold both local and global traffic in a layer.
+    """
     lay = layer[injected]
     nb = nbytes[injected]
     ch = ch_of_node[src[injected]]
-    flat = lay.astype(np.int64) * n_channels + ch
-    size = n_layers * n_channels
-    bytes_lc = np.bincount(flat, weights=nb,
-                           minlength=size).reshape(n_layers, n_channels)
-    msgs_lc = np.bincount(flat, minlength=size).reshape(n_layers, n_channels)
-    # active transmitters: distinct (layer, src) pairs with injected traffic
     n_nodes = len(ch_of_node)
-    pairs = np.unique(lay.astype(np.int64) * n_nodes + src[injected])
-    pflat = (pairs // n_nodes) * n_channels + ch_of_node[pairs % n_nodes]
-    active_lc = np.bincount(pflat, minlength=size).reshape(n_layers,
-                                                           n_channels)
+    if zcls is None:
+        flat = lay.astype(np.int64) * n_channels + ch
+        size = n_layers * n_channels
+        shape = (n_layers, n_channels)
+        pairs = np.unique(lay.astype(np.int64) * n_nodes + src[injected])
+        pflat = (pairs // n_nodes) * n_channels + ch_of_node[pairs % n_nodes]
+    else:
+        zc = zcls[injected]
+        flat = (lay.astype(np.int64) * n_channels + ch) * n_zcls + zc
+        size = n_layers * n_channels * n_zcls
+        shape = (n_layers, n_channels, n_zcls)
+        key = (lay.astype(np.int64) * n_nodes + src[injected]) * n_zcls + zc
+        pairs = np.unique(key)
+        psrc = (pairs // n_zcls) % n_nodes
+        pflat = ((pairs // n_zcls // n_nodes) * n_channels
+                 + ch_of_node[psrc]) * n_zcls + pairs % n_zcls
+    bytes_lc = np.bincount(flat, weights=nb, minlength=size).reshape(shape)
+    msgs_lc = np.bincount(flat, minlength=size).reshape(shape)
+    active_lc = np.bincount(pflat, minlength=size).reshape(shape)
     return bytes_lc, msgs_lc.astype(float), active_lc.astype(float)
 
 
 def network_layer_times(n_layers: int, layer: np.ndarray, nbytes: np.ndarray,
                         src: np.ndarray, n_nodes: int, injected: np.ndarray,
-                        net: NetworkConfig) -> Tuple[np.ndarray, np.ndarray,
-                                                     float]:
+                        net: NetworkConfig, *, grid=None, node_coords=None,
+                        max_hops=None) -> Tuple[np.ndarray, np.ndarray,
+                                                float]:
     """Per-layer wireless times under ``net``.
 
     Returns ``(t_wireless (L,), wl_bytes_per_layer (L,), extra_bytes)``
     where ``extra_bytes`` is the MAC's non-payload transmission overhead
-    for the energy model.
+    for the energy model.  A spatial-reuse plan additionally needs the
+    package geometry: ``grid`` (rows, cols), ``node_coords`` (the
+    (n_nodes, 2) clamped grid positions) and per-packet ``max_hops``.
     """
     plan = net.channels
     ch_of_node = plan.assign(n_nodes)
     bw_c = plan.channel_bandwidth(net.bandwidth)
-    bytes_lc, msgs_lc, active_lc = channel_aggregates(
-        n_layers, layer, nbytes, src, ch_of_node, plan.n_channels, injected)
-    t_lc = mac_times(net.mac, bytes_lc, msgs_lc, active_lc, bw_c)
-    extra = float(mac_extra_bytes(net.mac, bytes_lc, msgs_lc,
-                                  active_lc).sum())
-    return t_lc.max(axis=1), bytes_lc.sum(axis=1), extra
+    if plan.reuse_zones == 1:
+        # single interference domain per channel: the exact legacy path
+        bytes_lc, msgs_lc, active_lc = channel_aggregates(
+            n_layers, layer, nbytes, src, ch_of_node, plan.n_channels,
+            injected)
+        t_lc = mac_times(net.mac, bytes_lc, msgs_lc, active_lc, bw_c)
+        extra = float(mac_extra_bytes(net.mac, bytes_lc, msgs_lc,
+                                      active_lc).sum())
+        return t_lc.max(axis=1), bytes_lc.sum(axis=1), extra
+    if grid is None or node_coords is None or max_hops is None:
+        raise ValueError(
+            "a spatial-reuse plan (reuse_zones > 1) needs the package "
+            "geometry: pass grid=, node_coords= and max_hops=")
+    Z = plan.reuse_zones
+    zone_of_node, rd = plan.assign_spatial(grid, node_coords)
+    zcls = np.where(np.asarray(max_hops) <= rd, zone_of_node[src], Z)
+    bytes_lcz, msgs_lcz, active_lcz = channel_aggregates(
+        n_layers, layer, nbytes, src, ch_of_node, plan.n_channels,
+        injected, zcls=zcls, n_zcls=Z + 1)
+    t_lcz = mac_times(net.mac, bytes_lcz, msgs_lcz, active_lcz, bw_c)
+    t_lc = t_lcz[..., Z] + t_lcz[..., :Z].max(axis=-1)
+    extra = float(mac_extra_bytes(net.mac, bytes_lcz, msgs_lcz,
+                                  active_lcz).sum())
+    return t_lc.max(axis=1), bytes_lcz.sum(axis=(1, 2)), extra

@@ -23,7 +23,11 @@ with time-resolved occupancy of every network resource:
   the MAC protocol (`repro.net.mac.mac_packet_times`): ideal is
   bit-compatible with the paper's volume/bandwidth aggregate; TDMA
   pays slot quantisation + guard per packet; token pays an acquisition
-  wait that tracks the *instantaneous* active-station count.
+  wait that tracks the *instantaneous* active-station count.  Under a
+  spatial-reuse plan (`ChannelPlan.reuse_zones > 1`) each channel
+  splits into per-zone FIFOs serving concurrently; a packet whose hop
+  span exceeds the reuse distance is heard package-wide and quiesces
+  every zone of its channel.
 - **DRAM ports** — ``pooled`` (default) keeps the analytic
   total-bytes/aggregate-bandwidth term; ``ports`` serves each DRAM
   module's queue at its own pin rate.
@@ -48,6 +52,7 @@ import numpy as np
 from repro.core.simulator import (BOTTLENECKS, PJ_PER_BIT_DRAM,
                                   PJ_PER_BIT_NOP_HOP, mac_energy_pj,
                                   noc_energy_pj)
+from repro.core.topology import node_grid_coords
 from repro.core.traffic import TrafficTrace
 from repro.core.wireless import eligibility, wireless_energy_joules
 from repro.net.config import as_network
@@ -144,12 +149,24 @@ class PacketSim:
         self._l_starts = np.searchsorted(trace.layer[self._lorder],
                                          np.arange(trace.n_layers + 1))
 
-        # wireless plane
+        # wireless plane: per-channel FIFOs — per (channel, zone) FIFOs
+        # under a spatial-reuse plan, where a zone-local packet occupies
+        # its source's zone server and a global (beyond-reuse-distance)
+        # packet quiesces every zone of its channel
         plan = self.net.channels
         self.n_channels = plan.n_channels
         self.ch_of_node = plan.assign(trace.topo.n_nodes)
         self.pkt_ch = self.ch_of_node[trace.src]
         self.bw_c = plan.channel_bandwidth(self.net.bandwidth)
+        self.n_zones = plan.reuse_zones
+        self.n_zcls = 1 if self.n_zones == 1 else self.n_zones + 1
+        if self.n_zones == 1:
+            self.pkt_zc = np.zeros(M, np.int64)
+        else:
+            zone_of_node, rd = plan.assign_spatial(
+                cfg.grid, node_grid_coords(trace.topo))
+            self.pkt_zc = np.where(trace.max_hops <= rd,
+                                   zone_of_node[trace.src], self.n_zones)
 
         # DRAM ports
         self.n_dram = max(1, len(trace.topo.dram_coords))
@@ -184,8 +201,8 @@ class PacketSim:
         tr, mac = self.trace, self.net.mac
         idx = np.nonzero(injected)[0]           # trace (= injection) order
         v = tr.nbytes[idx]
-        grp = tr.layer[idx].astype(np.int64) * self.n_channels \
-            + self.pkt_ch[idx]
+        grp = (tr.layer[idx].astype(np.int64) * self.n_channels
+               + self.pkt_ch[idx]) * self.n_zcls + self.pkt_zc[idx]
         order = np.argsort(grp, kind="stable")
         a_now = np.empty(len(idx))
         pairs = grp[order] * tr.topo.n_nodes + tr.src[idx][order]
@@ -250,7 +267,10 @@ class PacketSim:
             busy = np.bincount(seg, weights=self._x_add[keep],
                                minlength=L * self.n_cuts) \
                 .reshape(L, self.n_cuts)
-            t_nop = busy.max(axis=1)
+            # a trace can have no mesh resources at all (single-column
+            # grids where every route is chiplet-local or enters at the
+            # aligned edge router) — the NoP term is then zero
+            t_nop = busy.max(axis=1) if busy.size else np.zeros(L)
             cut_busy, link_busy = busy.sum(axis=0), None
         else:  # "xy": fixed dimension-ordered links
             epk = tr.inc_msg
@@ -261,21 +281,26 @@ class PacketSim:
                                / self.link_bw,
                                minlength=L * tr.n_links) \
                 .reshape(L, tr.n_links)
-            t_nop = busy.max(axis=1)
+            t_nop = busy.max(axis=1) if busy.size else np.zeros(L)
             link_busy = busy.sum(axis=0)
             cut_busy = np.bincount(self.cut_of_link, weights=link_busy,
                                    minlength=self.n_cuts)
         _, grp, svc, extra = self._wireless_batch(mask)
         busy_wl = np.bincount(grp, weights=svc,
-                              minlength=L * self.n_channels) \
-            .reshape(L, self.n_channels)
-        t_wl = busy_wl.max(axis=1)
+                              minlength=L * self.n_channels * self.n_zcls) \
+            .reshape(L, self.n_channels, self.n_zcls)
+        if self.n_zcls == 1:
+            t_wl = busy_wl[:, :, 0].max(axis=1)
+        else:   # global phase quiesces the zones, locals run concurrently
+            Z = self.n_zones
+            t_wl = (busy_wl[:, :, Z]
+                    + busy_wl[:, :, :Z].max(axis=2)).max(axis=1)
         nd = tr.dram_node
         busy_ld = np.bincount(
             tr.layer[nd >= 0].astype(np.int64) * self.n_dram + nd[nd >= 0],
             weights=self._dram_svc[nd >= 0],
             minlength=L * self.n_dram).reshape(L, self.n_dram)
-        busies = (cut_busy, busy_wl.sum(axis=0), busy_ld.sum(axis=0),
+        busies = (cut_busy, busy_wl.sum(axis=(0, 2)), busy_ld.sum(axis=0),
                   link_busy)
         return t_nop, t_wl, self._dram_terms(busy_ld), extra, busies
 
@@ -314,19 +339,24 @@ class PacketSim:
         t_wl = np.zeros(L)
         busy_ld = np.zeros((L, self.n_dram))
         cut_busy = np.zeros(self.n_cuts)
+        # wireless airtime per channel (a global transmission's service
+        # counts once, not once per quiesced zone server) — matches the
+        # planned path's channel_busy accounting exactly
+        wl_airtime = np.zeros(self.n_channels)
         extra_bytes = 0.0
 
         # per-resource next-free-time pools (barrier-rolled per layer);
         # the adaptive model keeps a raw (cut, parallel-slot) matrix so
         # the inf-padding of short cuts stays out of the busy accounting
         wired_pool = ResourcePool.of(tr.n_links if xy else self.n_cuts)
-        ch_pool = ResourcePool.of(self.n_channels)
+        ch_pool = ResourcePool.of(self.n_channels * self.n_zones)
         dram_pool = ResourcePool.of(self.n_dram)
 
         for li in range(L):
             pkts = self._lorder[self._l_starts[li]:self._l_starts[li + 1]]
             linkmat = pad.copy() if adaptive else None
-            ch_srcs = [set() for _ in range(self.n_channels)]
+            ch_srcs = [[set() for _ in range(self.n_zcls)]
+                       for _ in range(self.n_channels)]
             for p in pkts:
                 v = tr.nbytes[p]
                 nd = tr.dram_node[p]
@@ -357,10 +387,18 @@ class PacketSim:
                 go = False
                 if self.eligible[p]:
                     ch = int(self.pkt_ch[p])
-                    a_now = len(ch_srcs[ch] | {int(tr.src[p])})
+                    zc = int(self.pkt_zc[p])
+                    a_now = len(ch_srcs[ch][zc] | {int(tr.src[p])})
                     s_wl = float(mac_packet_times(mac, v, a_now, self.bw_c))
-                    proj_wl = ch_pool.peek(np.array([ch]),
-                                           np.array([s_wl]))
+                    if zc >= self.n_zones:
+                        # global transmission: quiesces every zone of its
+                        # channel — starts when all are free, blocks all
+                        ids_wl = np.arange(ch * self.n_zones,
+                                           (ch + 1) * self.n_zones)
+                        proj_wl = float(ch_pool.free[ids_wl].max() + s_wl)
+                    else:
+                        ids_wl = np.array([ch * self.n_zones + zc])
+                        proj_wl = ch_pool.peek(ids_wl, np.array([s_wl]))
                     if mask is not None:
                         go = bool(mask[p])
                     else:
@@ -372,8 +410,12 @@ class PacketSim:
                 # --- commit ---
                 if go:
                     injected[p] = True
-                    ch_pool.serve(np.array([ch]), np.array([s_wl]))
-                    ch_srcs[ch].add(int(tr.src[p]))
+                    if zc >= self.n_zones:
+                        ch_pool.free[ids_wl] = proj_wl
+                    else:
+                        ch_pool.serve(ids_wl, np.array([s_wl]))
+                    wl_airtime[ch] += s_wl
+                    ch_srcs[ch][zc].add(int(tr.src[p]))
                     extra_bytes += float(mac_packet_extra_bytes(mac, v,
                                                                 a_now))
                 elif adaptive:
@@ -401,7 +443,7 @@ class PacketSim:
             cut_busy, link_busy = wired_pool.busy, None
         else:
             link_busy = None
-        busies = (cut_busy, ch_pool.busy, busy_ld.sum(axis=0), link_busy)
+        busies = (cut_busy, wl_airtime, busy_ld.sum(axis=0), link_busy)
         return self._finish(injected, t_nop, t_wl, self._dram_terms(busy_ld),
                             extra_bytes, busies, name)
 
