@@ -2,26 +2,120 @@
 reports.  Prints ``name,us_per_call,derived`` CSV rows and writes the full
 structured results to experiments/bench_results.json (keys sorted, and
 ``--only <row>`` merges into the existing file — so adding or refreshing
-one row churns only that row's diff)."""
+one row churns only that row's diff).  Each run also persists a
+``_bench_meta`` block — per-row wall time and the derived-metric string —
+so the perf trajectory is machine-readable from the committed file.
+
+``--check`` turns the driver into a regression gate: it re-runs the
+requested rows (all rows with committed metrics when no ``--only`` is
+given), parses each derived metric numerically, and exits non-zero with
+a readable delta table if anything drifts beyond the row's tolerance
+from the committed ``bench_results.json``.  Check mode never writes."""
 
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import re
+import sys
 import time
+
+#: the _bench_meta key holding per-row wall time + derived metrics
+META_KEY = "_bench_meta"
+
+#: per-row relative tolerance overrides for --check (every row is
+#: seeded/deterministic, so the default only needs to absorb float
+#: jitter across platforms; raise a row's entry here if a legitimate
+#: source of run-to-run variance ever lands)
+CHECK_RTOL = {
+    "default": 1e-6,
+}
+CHECK_ATOL = 1e-12
+
+_NUM = r"[-+]?(?:\d+\.?\d*|\.\d+)(?:[eE][-+]?\d+)?"
+
+
+def parse_derived(derived: str) -> dict:
+    """``"k=v;k=v"`` -> {key: float} for every numerically-comparable v.
+
+    Handles plain/scientific floats, ``12.3%``, ``2.29x``, ``13/15``
+    fractions (compared as a/b), and ``True``/``False`` booleans.
+    """
+    out = {}
+    for part in str(derived).split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        v = v.strip()
+        if v in ("True", "False"):
+            out[k] = float(v == "True")
+            continue
+        m = re.fullmatch(rf"({_NUM})\s*/\s*({_NUM})", v)
+        if m:
+            a, b = float(m.group(1)), float(m.group(2))
+            out[k] = a / b if b else a
+            continue
+        m = re.fullmatch(rf"({_NUM})\s*[%x]?", v)
+        if m:
+            out[k] = float(m.group(1))
+    return out
 
 
 def _run(name, fn, derived_fn):
-    t0 = time.time()
+    t0 = time.perf_counter()
     result = fn()
-    us = (time.time() - t0) * 1e6
+    us = (time.perf_counter() - t0) * 1e6
     derived = derived_fn(result)
     print(f"{name},{us:.0f},{derived}")
-    return name, result
+    return result, {"us_per_call": round(us, 1), "derived": derived}
 
 
-def main(argv=None) -> None:
+def check_rows(rows, committed: dict, rtol: float | None = None) -> int:
+    """Regression gate: re-run ``rows``, diff against ``committed``.
+
+    Returns the number of drifted metrics (0 = pass) and prints a delta
+    table for anything out of tolerance.
+    """
+    meta = committed.get(META_KEY, {})
+    deltas = []
+    for name, fn, derived_fn in rows:
+        if name not in meta:
+            deltas.append((name, "(row)", "missing from committed "
+                           f"{META_KEY}", "", ""))
+            continue
+        want = parse_derived(meta[name]["derived"])
+        result, m = _run(name, fn, derived_fn)
+        got = parse_derived(m["derived"])
+        tol = rtol if rtol is not None else CHECK_RTOL.get(
+            name, CHECK_RTOL["default"])
+        for k, w in want.items():
+            if k not in got:
+                deltas.append((name, k, f"{w:g}", "(missing)", ""))
+                continue
+            g = got[k]
+            if abs(g - w) > CHECK_ATOL + tol * abs(w):
+                rel = abs(g - w) / (abs(w) or 1.0)
+                deltas.append((name, k, f"{w:g}", f"{g:g}",
+                               f"{100 * rel:.3g}%"))
+        for k in got.keys() - want.keys():
+            deltas.append((name, k, "(missing)", f"{got[k]:g}", ""))
+    if deltas:
+        hdrs = ("row", "metric", "committed", "got", "drift")
+        wid = [max(len(str(r[i])) for r in deltas + [hdrs])
+               for i in range(len(hdrs))]
+        print("\nBENCH CHECK FAILED — metrics out of tolerance:",
+              file=sys.stderr)
+        for r in [hdrs] + deltas:
+            print("  " + "  ".join(str(c).ljust(w)
+                                   for c, w in zip(r, wid)),
+                  file=sys.stderr)
+    else:
+        print(f"bench check OK ({len(rows)} row(s) within tolerance)")
+    return len(deltas)
+
+
+def main(argv=None) -> int:
     from benchmarks import lm_scale, paper_figs
     from repro.core import make_trace
     from repro.core.workloads import WORKLOADS
@@ -133,6 +227,17 @@ def main(argv=None) -> None:
     ap.add_argument("--only", action="append", metavar="ROW",
                     help="run only the named row (repeatable); the "
                          "result is merged into bench_results.json")
+    ap.add_argument("--check", action="store_true",
+                    help="regression gate: re-run the requested rows and "
+                         "fail if any derived metric drifts beyond "
+                         "tolerance from the committed results file "
+                         "(never writes)")
+    ap.add_argument("--rtol", type=float, default=None,
+                    help="override the per-row relative tolerance for "
+                         "--check")
+    ap.add_argument("--file", default=None, metavar="PATH",
+                    help="results file (default: "
+                         "experiments/bench_results.json)")
     args = ap.parse_args(argv)
     if args.only:
         known = {name for name, _, _ in rows}
@@ -141,22 +246,38 @@ def main(argv=None) -> None:
             ap.error(f"unknown row(s) {unknown}; pick from {sorted(known)}")
         rows = [r for r in rows if r[0] in set(args.only)]
 
+    out = args.file or os.path.join(os.path.dirname(__file__), "..",
+                                    "experiments", "bench_results.json")
+
+    if args.check:
+        if not os.path.exists(out):
+            print(f"bench check: no committed results at {out}",
+                  file=sys.stderr)
+            return 2
+        with open(out) as f:
+            committed = json.load(f)
+        if not args.only:   # default: gate every row with committed meta
+            rows = [r for r in rows
+                    if r[0] in committed.get(META_KEY, {})]
+        print("name,us_per_call,derived")
+        return 1 if check_rows(rows, committed, args.rtol) else 0
+
+    meta = {}
     print("name,us_per_call,derived")
     for name, fn, d in rows:
-        n, res = _run(name, fn, d)
-        results[n] = res
+        results[name], meta[name] = _run(name, fn, d)
 
-    out = os.path.join(os.path.dirname(__file__), "..", "experiments",
-                       "bench_results.json")
-    os.makedirs(os.path.dirname(out), exist_ok=True)
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     merged = {}
     if args.only and os.path.exists(out):   # --only refreshes rows in place
         with open(out) as f:                # (full runs rewrite the file,
             merged = json.load(f)           # so removed rows don't linger)
     merged.update(results)
+    merged.setdefault(META_KEY, {}).update(meta)
     with open(out, "w") as f:
         json.dump(merged, f, indent=1, sort_keys=True, default=str)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

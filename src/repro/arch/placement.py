@@ -35,11 +35,14 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
-from typing import Dict, List, Sequence, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.dse import grid_best_speedup
+from repro.obs.metrics import DEFAULT_REGISTRY
+from repro.obs.provenance import make_provenance
 from repro.core.mapper import Mapping, snake_order
 from repro.core.simulator import simulate_wired
 from repro.core.topology import AcceleratorConfig
@@ -68,6 +71,8 @@ class PlacementResult:
     objective: str
     method: str
     evaluations: int             # distinct states evaluated so far
+    provenance: Optional[dict] = dataclasses.field(
+        default=None, compare=False)  # dse.provenance of the search
 
     @property
     def makespan(self) -> float:
@@ -175,14 +180,23 @@ class PlacementProblem:
         return t_wired if objective == "wired" else t_hybrid
 
     def result(self, state: PlacementState, objective: str,
-               method: str) -> PlacementResult:
+               method: str,
+               provenance: Optional[dict] = None) -> PlacementResult:
         t_wired, t_hybrid = self.evaluate(state)
         return PlacementResult(
             state=state,
             slot_names=tuple(self.specs[k].name for k in state.order),
             t_wired=t_wired, t_hybrid=t_hybrid,
             objective=objective, method=method,
-            evaluations=self.evaluations)
+            evaluations=self.evaluations,
+            provenance=provenance)
+
+    def provenance_config(self, objective: str, **extra) -> dict:
+        """The hashed search configuration of this problem instance."""
+        return {"workload": self.workload, "mix": self.mix,
+                "grid": self.grid, "objective": objective,
+                "net": self.net, "packet_bytes": self.packet_bytes,
+                **extra}
 
 
 # ----------------------------------------------------------------------
@@ -322,6 +336,8 @@ def anneal(problem: PlacementProblem, objective: str = "hybrid",
     joint states.  Deterministic for a fixed seed — the RNG stream is
     the only source of randomness.
     """
+    t0 = time.perf_counter()
+    evals0 = problem.evaluations
     rng = np.random.default_rng(seed)
     best = greedy_seed(problem)
     best_cost = problem.cost(best, objective)
@@ -350,7 +366,15 @@ def anneal(problem: PlacementProblem, objective: str = "hybrid",
                     best, best_cost = cur, cur_cost
             temp *= decay
     best = _polish(problem, best, objective)
-    return problem.result(best, objective, "anneal")
+    wall = time.perf_counter() - t0
+    DEFAULT_REGISTRY.histogram("arch.anneal",
+                               objective=objective).observe(wall)
+    prov = make_provenance(
+        "arch.anneal",
+        problem.provenance_config(objective, steps=steps,
+                                  restarts=restarts),
+        seed=seed, points=problem.evaluations - evals0, wall_s=wall)
+    return problem.result(best, objective, "anneal", provenance=prov)
 
 
 def exhaustive(problem: PlacementProblem, objective: str = "hybrid",
@@ -361,6 +385,8 @@ def exhaustive(problem: PlacementProblem, objective: str = "hybrid",
     if n > 6:
         raise ValueError("exhaustive enumeration is for <= 6-slot "
                          f"packages (got {n}); use anneal()")
+    t0 = time.perf_counter()
+    evals0 = problem.evaluations
     seen, orders = set(), []
     for perm in itertools.permutations(range(n)):
         key = tuple(problem.specs[k].name for k in perm)
@@ -381,7 +407,13 @@ def exhaustive(problem: PlacementProblem, objective: str = "hybrid",
             c = problem.cost(state, objective)
             if c < best_cost:
                 best, best_cost = state, c
-    return problem.result(best, objective, "exhaustive")
+    wall = time.perf_counter() - t0
+    DEFAULT_REGISTRY.histogram("arch.exhaustive",
+                               objective=objective).observe(wall)
+    prov = make_provenance(
+        "arch.exhaustive", problem.provenance_config(objective),
+        points=problem.evaluations - evals0, wall_s=wall)
+    return problem.result(best, objective, "exhaustive", provenance=prov)
 
 
 # ----------------------------------------------------------------------
@@ -403,6 +435,8 @@ class CodesignResult:
     speedup_hybrid: float        # wireless gain at the co-designed placement
     speedup_codesigned: float    # best-wired-package vs best-hybrid-package
     n_evaluations: int
+    provenance: Optional[dict] = dataclasses.field(
+        default=None, compare=False)  # dse.provenance of the whole cell
 
 
 def balanced_state(problem: PlacementProblem,
@@ -445,6 +479,7 @@ def codesign(workload: str | List[Layer], mix: str = "big_little",
     evaluated under BOTH planes, so the wired and hybrid spreads are
     measured over the same placements.
     """
+    t0 = time.perf_counter()
     problem = PlacementProblem(workload, mix, grid, net, base)
     wired = anneal(problem, "wired", seed=seed, steps=steps,
                    restarts=restarts)
@@ -469,4 +504,11 @@ def codesign(workload: str | List[Layer], mix: str = "big_little",
         spread_hybrid=float(t_h.max() / t_h.min()),
         speedup_hybrid=hybrid.hybrid_speedup,
         speedup_codesigned=wired.t_wired / hybrid.t_hybrid,
-        n_evaluations=problem.evaluations)
+        n_evaluations=problem.evaluations,
+        provenance=make_provenance(
+            "arch.codesign",
+            problem.provenance_config("both", steps=steps,
+                                      restarts=restarts,
+                                      n_samples=n_samples),
+            seed=seed, points=problem.evaluations,
+            wall_s=time.perf_counter() - t0))

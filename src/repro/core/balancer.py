@@ -44,6 +44,7 @@ import numpy as np
 from repro.net.config import NetworkConfig, as_network
 from repro.net.mac import mac_times
 from repro.net.stack import network_layer_times
+from repro.obs.trace import active_recorder, recording
 
 from .simulator import SimResult, _finalize, energy_joules, simulate_wired
 from .topology import node_grid_coords
@@ -87,19 +88,26 @@ def _mask_parts(trace: TrafficTrace, mask: np.ndarray, net: NetworkConfig,
 def _stitch_best(trace: TrafficTrace, net: NetworkConfig,
                  greedy_mask: np.ndarray, t_rest: np.ndarray,
                  cut_mat: np.ndarray, cut_bw: np.ndarray):
-    """Per-layer stitch of the greedy mask against the best grid point."""
+    """Per-layer stitch of the greedy mask against the best grid point.
+
+    Trial evaluations (the anchor sweep and both candidate costings)
+    run with the recorder masked — only the final chosen timeline is
+    ever emitted into an active `SimTrace`.
+    """
     from .dse import grid_anchor    # no cycle: dse doesn't import us
-    _, thr, p = grid_anchor(trace, net)
-    grid_mask = (eligibility(trace, thr)
-                 & injection_filter(len(trace.nbytes), p))
-    gl, gnop, gwl = _mask_parts(trace, grid_mask, net, cut_mat, cut_bw)
-    bl, bnop, bwl = _mask_parts(trace, greedy_mask, net, cut_mat, cut_bw)
+    with recording(None):
+        _, thr, p = grid_anchor(trace, net)
+        grid_mask = (eligibility(trace, thr)
+                     & injection_filter(len(trace.nbytes), p))
+        gl, gnop, gwl = _mask_parts(trace, grid_mask, net, cut_mat, cut_bw)
+        bl, bnop, bwl = _mask_parts(trace, greedy_mask, net, cut_mat,
+                                    cut_bw)
     t_grid = np.maximum.reduce([t_rest, gnop, gwl])
     t_greedy = np.maximum.reduce([t_rest, bnop, bwl])
     use_grid = t_grid < t_greedy            # prefer greedy on ties
     final = np.where(use_grid[trace.layer], grid_mask, greedy_mask)
     loads = np.where(use_grid[:, None], gl, bl)
-    return final, loads
+    return final, loads, use_grid, t_grid, t_greedy
 
 
 def _wl_time(mac, ch_bytes, ch_msgs, ch_active, bw_c, n_reuse):
@@ -208,8 +216,19 @@ def balance(trace: TrafficTrace,
     # anchor against the paper's sweep: per layer, keep whichever injected
     # set — greedy water-filling or the best static grid point — projects
     # the smaller layer time (exact: layers are independent analytically)
-    injected, loads = _stitch_best(trace, net, injected, t_rest,
-                                   cut_mat, cut_bw)
+    injected, loads, use_grid, t_grid, t_greedy = _stitch_best(
+        trace, net, injected, t_rest, cut_mat, cut_bw)
+
+    st = active_recorder()
+    if st is not None:
+        # one span per layer on the "balance" track: which candidate the
+        # stitch kept, and both projected times for the why
+        for li in range(trace.n_layers):
+            st.add_layer_event(
+                "balance", "grid" if use_grid[li] else "greedy", li, 0.0,
+                float(t_grid[li] if use_grid[li] else t_greedy[li]),
+                "balancer", t_grid=float(t_grid[li]),
+                t_greedy=float(t_greedy[li]))
 
     # re-derive the wireless timeline + MAC energy overhead from the final
     # injected set through the same stack the simulator uses
@@ -222,7 +241,8 @@ def balance(trace: TrafficTrace,
                                                    extra_bytes)
     sim.energy_j = energy_joules(trace, loads,
                                  sim.wireless_bytes + extra_bytes)
-    base = simulate_wired(trace).total_time
+    with recording(None):   # the baseline is a trial, not the timeline
+        base = simulate_wired(trace).total_time
     elig_vol = float(trace.nbytes[eligible].sum()) or 1.0
     return BalancerResult(
         sim=sim, injected=injected,

@@ -15,7 +15,8 @@ idealized speedup survives a real MAC.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+import time
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -25,6 +26,8 @@ from repro.net.batched import (BatchedDesignSpace, GridResult, GridSpec,
 from repro.net.channel import ChannelPlan
 from repro.net.config import NetworkConfig
 from repro.net.mac import MacConfig
+from repro.obs.metrics import DEFAULT_REGISTRY
+from repro.obs.provenance import make_provenance
 
 from .simulator import (TrafficTrace, make_trace, simulate_hybrid,
                         simulate_wired)
@@ -53,6 +56,8 @@ class SweepResult:
     best_speedup: float
     best_threshold: int
     best_injection: float
+    provenance: Optional[dict] = dataclasses.field(
+        default=None, compare=False)  # dse.provenance (sweep_all)
 
 
 def _result_from_grid(workload: str, bandwidth_gbps: int,
@@ -140,16 +145,28 @@ def sweep_all(traces: Dict[str, TrafficTrace],
     if engine not in ("batched", "loop"):
         raise ValueError(f"unknown engine {engine!r}; use 'batched' or 'loop'")
     out = []
-    if engine == "loop":
-        for wl, trace in traces.items():
-            for bw in BANDWIDTHS_GBPS:
-                out.append(sweep(trace, wl, bw))
-        return out
-    spec = GridSpec()
-    for wl, trace in traces.items():
-        res = batched_design_space(trace).evaluate(spec)
-        for bw in BANDWIDTHS_GBPS:
-            out.append(_result_from_grid(wl, bw, res.ideal_grid(bw)))
+    with DEFAULT_REGISTRY.span("dse.sweep_all", engine=engine) as t:
+        if engine == "loop":
+            for wl, trace in traces.items():
+                for bw in BANDWIDTHS_GBPS:
+                    out.append(sweep(trace, wl, bw))
+        else:
+            spec = GridSpec()
+            for wl, trace in traces.items():
+                res = batched_design_space(trace).evaluate(spec)
+                for bw in BANDWIDTHS_GBPS:
+                    out.append(_result_from_grid(wl, bw,
+                                                 res.ideal_grid(bw)))
+    prov = make_provenance(
+        "dse.sweep_all",
+        {"workloads": sorted(traces), "engine": engine,
+         "thresholds": THRESHOLDS, "injections": INJECTIONS,
+         "bandwidths_gbps": BANDWIDTHS_GBPS},
+        points=len(traces) * len(THRESHOLDS) * len(INJECTIONS)
+        * len(BANDWIDTHS_GBPS),
+        wall_s=t["seconds"])
+    for r in out:
+        r.provenance = prov
     return out
 
 
@@ -161,6 +178,8 @@ class NetworkSweepResult:
     result: GridResult
     best_speedup: float
     best_config: NetworkConfig
+    provenance: Optional[dict] = dataclasses.field(
+        default=None, compare=False)  # dse.provenance (network_sweep_all)
 
     def best_by_network(self) -> Dict[Tuple[str, str], float]:
         """(mac protocol, plan) -> best speedup over thr/inj/bw."""
@@ -184,7 +203,19 @@ def network_sweep(trace: TrafficTrace, workload: str,
 def network_sweep_all(traces: Dict[str, TrafficTrace],
                       macs=NETWORK_MACS,
                       plans=NETWORK_PLANS) -> List[NetworkSweepResult]:
-    return [network_sweep(tr, wl, macs, plans) for wl, tr in traces.items()]
+    with DEFAULT_REGISTRY.span("dse.network_sweep_all") as t:
+        out = [network_sweep(tr, wl, macs, plans)
+               for wl, tr in traces.items()]
+    prov = make_provenance(
+        "dse.network_sweep_all",
+        {"workloads": sorted(traces), "macs": list(macs),
+         "plans": [p.describe() for p in plans]},
+        points=len(traces) * len(macs) * len(plans) * len(THRESHOLDS)
+        * len(INJECTIONS) * len(BANDWIDTHS_GBPS),
+        wall_s=t["seconds"])
+    for r in out:
+        r.provenance = prov
+    return out
 
 
 @dataclasses.dataclass
@@ -202,6 +233,8 @@ class PolicySweepResult:
     grid_best_speedup: float       # best static grid point (same network)
     policy_speedups: Dict[str, float]
     policy_times: Dict[str, float]
+    provenance: Optional[dict] = dataclasses.field(
+        default=None, compare=False)  # dse.provenance (policy_sweep_all)
 
     def best_policy(self) -> Tuple[str, float]:
         name = max(self.policy_speedups, key=self.policy_speedups.get)
@@ -259,8 +292,18 @@ def policy_sweep_all(traces: Dict[str, TrafficTrace],
                      net: NetworkConfig | None = None,
                      policies=("static", "greedy", "adaptive", "oracle")
                      ) -> List[PolicySweepResult]:
-    return [policy_sweep(tr, wl, net, policies)
-            for wl, tr in traces.items()]
+    with DEFAULT_REGISTRY.span("dse.policy_sweep_all") as t:
+        out = [policy_sweep(tr, wl, net, policies)
+               for wl, tr in traces.items()]
+    prov = make_provenance(
+        "dse.policy_sweep_all",
+        {"workloads": sorted(traces), "policies": list(policies),
+         "net": net},
+        points=len(traces) * (len(policies) + 1),   # +1: wired baseline
+        wall_s=t["seconds"])
+    for r in out:
+        r.provenance = prov
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -329,6 +372,8 @@ class ScalingResult:
     best_reuse: float             # best speedup over the reuse plans
     best_reuse_plan: str          # describe() of the winning plan ("1ch"
     #                               when no reuse plan fits the mesh)
+    provenance: Optional[dict] = dataclasses.field(
+        default=None, compare=False)  # dse.provenance (scaling_sweep)
 
     @property
     def recovered(self) -> float:
@@ -360,10 +405,14 @@ def scaling_sweep(workloads=None, grids=SCALING_GRIDS,
         from .workloads import WORKLOADS
         workloads = list(WORKLOADS)
     out = []
+    points = 0
+    t0 = time.perf_counter()
     for grid in grids:
         acc = scaled_config(tuple(grid))
         plans = (ChannelPlan(1),) + reuse_plans(tuple(grid))
         spec = GridSpec(bandwidths_gbps=(bandwidth_gbps,), plans=plans)
+        points += (len(workloads) * len(plans) * len(spec.thresholds)
+                   * len(spec.injections))
         for wl in workloads:
             trace = make_trace(wl, acc)
             if engine == "batched":
@@ -397,6 +446,16 @@ def scaling_sweep(workloads=None, grids=SCALING_GRIDS,
                 wired_time=base,
                 best_single=best_single, best_reuse=best_reuse,
                 best_reuse_plan=plan_desc))
+    wall = time.perf_counter() - t0
+    DEFAULT_REGISTRY.histogram("dse.scaling_sweep",
+                               engine=engine).observe(wall)
+    prov = make_provenance(
+        "dse.scaling_sweep",
+        {"workloads": list(workloads), "grids": [tuple(g) for g in grids],
+         "bandwidth_gbps": bandwidth_gbps, "engine": engine},
+        points=points, wall_s=wall)
+    for r in out:
+        r.provenance = prov
     return out
 
 

@@ -17,12 +17,13 @@ mechanism the paper identifies.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.net.config import NetworkConfig, as_network
 from repro.net.stack import network_layer_times
+from repro.obs.trace import active_recorder
 
 from .mapper import pipeline_mapping, spatial_mapping
 from .topology import AcceleratorConfig, build_topology, node_grid_coords
@@ -55,6 +56,7 @@ class SimResult:
     wireless_bytes: float = 0.0
     wireless_energy_j: float = 0.0
     energy_j: float = 0.0            # total platform energy per inference
+    layer_terms: Optional[np.ndarray] = None   # (L, 5) per-term stack
 
     @property
     def edp(self) -> float:
@@ -62,30 +64,60 @@ class SimResult:
         return self.energy_j * self.total_time
 
     def bottleneck_share(self) -> Dict[str, float]:
-        """Fraction of total time attributed to each bottleneck (Fig. 2)."""
+        """Fraction of total time attributed to each bottleneck (Fig. 2).
+
+        A degenerate (zero-time) run has no bottleneck: the explicit
+        convention is an empty dict, shared with the event engine's
+        `EventResult.bottleneck_share` and the obs attribution report.
+        """
+        if not self.total_time:
+            return {}
         shares = {b: 0.0 for b in BOTTLENECKS}
         for t, b in zip(self.layer_times, self.bottleneck):
             shares[b] += float(t)
-        tot = self.total_time or 1.0
-        return {b: v / tot for b, v in shares.items()}
+        return {b: v / self.total_time for b, v in shares.items()}
 
 
 def _finalize(trace: TrafficTrace, link_loads: np.ndarray,
               t_wireless: np.ndarray) -> SimResult:
+    t_cut = None
     if link_loads.size:
         cut_mat, cut_bw = trace.cut_matrix()
         # worst directed mesh-cut service time ("congested bisection links")
-        t_nop = (link_loads @ cut_mat / cut_bw).max(axis=1)
+        t_cut = link_loads @ cut_mat / cut_bw
+        t_nop = t_cut.max(axis=1)
     else:
         t_nop = np.zeros(trace.n_layers)
     stack = np.stack([trace.t_compute, trace.t_dram, trace.t_noc, t_nop,
                       t_wireless])
     layer_times = stack.max(axis=0)
     which = stack.argmax(axis=0)
+    st = active_recorder()
+    if st is not None:
+        # analytic coarse spans: the same track names as the event
+        # engine, with an ``an:`` category prefix — merged exports line
+        # up track for track
+        st.add_layer_matrix(trace.t_compute[:, None], "compute",
+                            "an:compute")
+        st.add_layer_matrix(trace.t_noc[:, None], "noc", "an:noc")
+        st.add_layer_matrix(trace.t_dram[:, None], "dram(pooled)",
+                            "an:dram-agg")
+        if t_cut is not None:
+            st.add_layer_matrix(t_cut, "cut{}", "an:wired")
+        for li in range(trace.n_layers):
+            st.add_layer_event(
+                "layers", f"L{li}:{BOTTLENECKS[which[li]]}", li, 0.0,
+                float(layer_times[li]), "layer",
+                **{b: float(stack[i, li])
+                   for i, b in enumerate(BOTTLENECKS)})
+        st.place_layers(layer_times)
+        st.meta.setdefault("plane", "analytic")
+        st.meta["total_time"] = float(layer_times.sum())
     return SimResult(
         total_time=float(layer_times.sum()),
         layer_times=layer_times,
         bottleneck=[BOTTLENECKS[i] for i in which],
+        layer_terms=stack.T.copy(),
     )
 
 

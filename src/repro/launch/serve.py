@@ -15,8 +15,11 @@ from repro.configs import ARCHS, reduced
 from repro.launch.mesh import (make_host_mesh, make_production_mesh,
                                    use_mesh)
 from repro.models import build_model
+from repro.obs.metrics import get_logger
 from repro.runtime.parallel import ParallelContext, parallel_context
 from repro.runtime.serve import ServeConfig, make_serve_fns
+
+log = get_logger("launch.serve")
 
 
 def main():
@@ -81,9 +84,11 @@ def main():
                         active[s] = None
             pos += 1
         dt = time.time() - t0
-        print(f"served {len(results)}/{args.requests} requests, "
-              f"{steps} decode steps x {args.slots} slots in {dt:.1f}s "
-              f"({steps*args.slots/dt:.1f} tok/s)")
+        log.info(f"served {len(results)}/{args.requests} requests, "
+                 f"{steps} decode steps x {args.slots} slots in {dt:.1f}s "
+                 f"({steps*args.slots/dt:.1f} tok/s)",
+                 served=len(results), steps=steps, wall_s=dt,
+                 tok_per_s=steps * args.slots / dt)
 
 
 if __name__ == "__main__":

@@ -25,12 +25,15 @@ from repro.configs import ARCHS, reduced
 from repro.data.pipeline import DataConfig, batch_for_model
 from repro.launch.mesh import (make_host_mesh, make_production_mesh,
                                    use_mesh)
+from repro.obs.metrics import get_logger
 from repro.optim.optimizers import OptimizerConfig
 from repro.runtime.compression import CompressionConfig
 from repro.runtime.fault_tolerance import StragglerMitigator
 from repro.runtime.parallel import ParallelContext, parallel_context
 from repro.runtime.sharding import state_shardings
 from repro.runtime.train import TrainConfig, make_train_step
+
+log = get_logger("launch.train")
 
 
 def main():
@@ -71,9 +74,10 @@ def main():
 
     mesh = (make_host_mesh() if args.mesh == "host"
             else make_production_mesh(multi_pod=args.mesh == "multipod"))
-    print(f"arch={cfg.name} reduced={args.reduced} "
-          f"params~{cfg.param_count()/1e6:.1f}M opt={opt_name} "
-          f"mesh={dict(mesh.shape)}")
+    log.info(f"arch={cfg.name} reduced={args.reduced} "
+             f"params~{cfg.param_count()/1e6:.1f}M opt={opt_name} "
+             f"mesh={dict(mesh.shape)}",
+             params_m=cfg.param_count() / 1e6)
 
     with use_mesh(mesh), parallel_context(ParallelContext()):
         abstract = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0)))
@@ -89,7 +93,7 @@ def main():
         if args.resume and latest_steps(args.ckpt_dir):
             state = restore(args.ckpt_dir, state, shardings=st_sh)
             start = int(jax.device_get(state["step"]))
-            print(f"resumed at step {start}")
+            log.info(f"resumed at step {start}", step=start)
 
         dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
                           vocab_size=cfg.vocab_size)
@@ -103,24 +107,30 @@ def main():
                 state, metrics = jit_step(state, batch)
                 metrics = jax.device_get(metrics)
             except Exception as e:  # noqa: BLE001 — crash recovery path
-                print(f"step {s} failed ({e}); restoring latest checkpoint")
+                log.error(f"step {s} failed ({e}); restoring latest "
+                          "checkpoint", step=s)
                 ck.wait()
                 state = restore(args.ckpt_dir, abstract, shardings=st_sh)
                 continue
             straggler.record(0, time.time() - t0)
             if s % args.log_every == 0 or s == args.steps - 1:
                 tps = args.batch * args.seq / max(1e-9, time.time() - t0)
-                print(f"step {s:5d} ce={float(metrics['ce']):.4f} "
-                      f"loss={float(metrics['loss']):.4f} tok/s={tps:,.0f}")
+                ce = round(float(metrics["ce"]), 4)
+                loss = round(float(metrics["loss"]), 4)
+                log.info(f"step {s:5d} ce={ce:.4f} loss={loss:.4f} "
+                         f"tok/s={tps:,.0f}", step=s, ce=ce, loss=loss)
             if s and s % args.ckpt_every == 0:
                 ck.save_async(state, s)
             if straggler.stragglers():
-                print(f"stragglers detected: {straggler.stragglers()}")
+                log.warning(
+                    f"stragglers detected: {straggler.stragglers()}",
+                    n_stragglers=len(straggler.stragglers()))
         ck.save_async(state, args.steps)
         ck.wait()
-        print(f"finished {args.steps - start} steps in "
-              f"{time.time()-t_run:.1f}s; checkpoints: "
-              f"{latest_steps(args.ckpt_dir)}")
+        log.info(f"finished {args.steps - start} steps in "
+                 f"{time.time()-t_run:.1f}s; checkpoints: "
+                 f"{latest_steps(args.ckpt_dir)}",
+                 steps_run=args.steps - start, wall_s=time.time() - t_run)
 
 
 if __name__ == "__main__":

@@ -26,6 +26,8 @@ from typing import Tuple
 
 import numpy as np
 
+from repro.obs.trace import active_recorder
+
 from .config import NetworkConfig
 from .mac import mac_extra_bytes, mac_times
 
@@ -94,6 +96,9 @@ def network_layer_times(n_layers: int, layer: np.ndarray, nbytes: np.ndarray,
         t_lc = mac_times(net.mac, bytes_lc, msgs_lc, active_lc, bw_c)
         extra = float(mac_extra_bytes(net.mac, bytes_lc, msgs_lc,
                                       active_lc).sum())
+        st = active_recorder()
+        if st is not None:
+            st.add_layer_matrix(t_lc, "ch{}", "an:wireless")
         return t_lc.max(axis=1), bytes_lc.sum(axis=1), extra
     if grid is None or node_coords is None or max_hops is None:
         raise ValueError(
@@ -109,4 +114,18 @@ def network_layer_times(n_layers: int, layer: np.ndarray, nbytes: np.ndarray,
     t_lc = t_lcz[..., Z] + t_lcz[..., :Z].max(axis=-1)
     extra = float(mac_extra_bytes(net.mac, bytes_lcz, msgs_lcz,
                                   active_lcz).sum())
+    st = active_recorder()
+    if st is not None:
+        # global phase first (it quiesces the channel), zone phases
+        # concurrently after it — the schedule the costing assumes
+        for li, c in zip(*np.nonzero(t_lcz.max(axis=-1))):
+            g = float(t_lcz[li, c, Z])
+            if g > 0.0:
+                st.add_layer_event(f"ch{c}/g", "span", int(li), 0.0, g,
+                                   "an:wireless")
+            for z in range(Z):
+                if t_lcz[li, c, z] > 0.0:
+                    st.add_layer_event(f"ch{c}/z{z}", "span", int(li), g,
+                                       float(t_lcz[li, c, z]),
+                                       "an:wireless")
     return t_lc.max(axis=1), bytes_lcz.sum(axis=(1, 2)), extra

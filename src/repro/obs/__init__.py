@@ -1,0 +1,41 @@
+"""Observability: time-resolved tracing, metrics, and export.
+
+The fifth layer of the repo — not a modelling plane but the
+instrumentation the four planes (analytic `repro.core`, channel/MAC
+`repro.net`, event-driven `repro.sim`, heterogeneous `repro.arch`)
+share.  Everything here is zero-cost when disabled: the engines run
+exactly their pre-instrumentation code paths unless a recorder is
+requested (`PacketSim(..., record=True)`) or installed
+(`with obs.recording(st): simulate_hybrid(...)`).
+
+- `trace`      — `SimTrace`: per-packet begin/end events on every
+  resource (mesh cut/link, wireless channel x reuse zone, DRAM port,
+  compute), per-layer spans, derived queue-depth/utilization counters,
+  and the active-recorder context the analytic plane emits into.
+- `export`     — lossless export to Chrome Trace Event Format JSON
+  (open directly in https://ui.perfetto.dev) and a compact ``.npz``
+  round-trippable form for programmatic analysis.
+- `metrics`    — label-keyed counter/gauge/histogram registry with a
+  logging adapter and span timers; time-binned utilization timelines;
+  the attribution report that decomposes each layer's span into
+  service vs queueing vs quiescence per resource.
+- `provenance` — `dse.provenance` records (config hash, seed, wall
+  time, points evaluated) stamped into every sweep result.
+"""
+
+from .export import (chrome_trace_events, export_chrome_trace, export_npz,
+                     load_npz)
+from .metrics import (DEFAULT_REGISTRY, MetricsRegistry, attribution_report,
+                      attribution_summary, format_attribution, get_logger,
+                      utilization_timeline)
+from .provenance import config_hash, make_provenance
+from .trace import SimTrace, TraceEvent, active_recorder, recording
+
+__all__ = [
+    "SimTrace", "TraceEvent", "active_recorder", "recording",
+    "chrome_trace_events", "export_chrome_trace", "export_npz", "load_npz",
+    "DEFAULT_REGISTRY", "MetricsRegistry", "attribution_report",
+    "attribution_summary", "format_attribution", "get_logger",
+    "utilization_timeline",
+    "config_hash", "make_provenance",
+]

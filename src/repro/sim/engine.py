@@ -57,6 +57,7 @@ from repro.core.traffic import TrafficTrace
 from repro.core.wireless import eligibility, wireless_energy_joules
 from repro.net.config import as_network
 from repro.net.mac import mac_packet_extra_bytes, mac_packet_times
+from repro.obs import trace as obs_trace
 
 from .calendar import ResourcePool, first_occurrence, segment_cumsum
 
@@ -83,17 +84,26 @@ class EventResult:
     policy: str
     link_model: str
     dram_model: str
+    trace: Optional["obs_trace.SimTrace"] = None   # when record=True
+    layer_terms: Optional[np.ndarray] = None       # (L, 5) stacked terms
 
     @property
     def edp(self) -> float:
         return self.energy_j * self.total_time
 
     def bottleneck_share(self) -> Dict[str, float]:
+        """Fraction of total time attributed to each bottleneck.
+
+        A degenerate (zero-time) run has no bottleneck: the explicit
+        convention is an empty dict, shared with
+        `repro.obs.metrics.attribution_report`'s empty list.
+        """
+        if not self.total_time:
+            return {}
         shares = {b: 0.0 for b in BOTTLENECKS}
         for t, b in zip(self.layer_times, self.bottleneck):
             shares[b] += float(t)
-        tot = self.total_time or 1.0
-        return {b: v / tot for b, v in shares.items()}
+        return {b: v / self.total_time for b, v in shares.items()}
 
 
 class PacketSim:
@@ -106,7 +116,8 @@ class PacketSim:
     """
 
     def __init__(self, trace: TrafficTrace, net, *,
-                 link_model: str = "striped", dram_model: str = "pooled"):
+                 link_model: str = "striped", dram_model: str = "pooled",
+                 record: bool = False):
         if link_model not in LINK_MODELS:
             raise ValueError(f"link_model must be one of {LINK_MODELS}")
         if dram_model not in DRAM_MODELS:
@@ -115,6 +126,7 @@ class PacketSim:
         self.net = as_network(net)
         self.link_model = link_model
         self.dram_model = dram_model
+        self.record = record
 
         cfg = trace.topo.config
         self.link_bw = cfg.nop_bw_per_side
@@ -218,11 +230,15 @@ class PacketSim:
 
     def _finish(self, mask: np.ndarray, t_nop: np.ndarray,
                 t_wl: np.ndarray, t_dram: np.ndarray, extra_bytes: float,
-                busies, policy_name: str) -> EventResult:
+                busies, policy_name: str,
+                st: Optional["obs_trace.SimTrace"] = None) -> EventResult:
         tr = self.trace
         stack = np.stack([tr.t_compute, t_dram, tr.t_noc, t_nop, t_wl])
         layer_times = stack.max(axis=0)
         which = stack.argmax(axis=0)
+        if st is not None:
+            self._finish_trace(st, mask, stack, layer_times, which,
+                               policy_name)
         wl_bytes = float(tr.nbytes[mask].sum())
         # platform energy: same (per-chiplet-aware) constants as the
         # analytic model; wired NoP bits = bytes x traversed links,
@@ -248,7 +264,41 @@ class PacketSim:
             cut_busy=cut_busy, channel_busy=channel_busy,
             dram_busy=dram_busy, link_busy=link_busy,
             policy=policy_name, link_model=self.link_model,
-            dram_model=self.dram_model)
+            dram_model=self.dram_model,
+            trace=st, layer_terms=stack.T.copy() if st is not None else None)
+
+    def _finish_trace(self, st, mask: np.ndarray, stack: np.ndarray,
+                      layer_times: np.ndarray, which: np.ndarray,
+                      policy_name: str) -> None:
+        """Coarse spans, layer spans, counters, metadata — then place
+        every pending layer-relative event on the barrier timeline."""
+        tr = self.trace
+        L = tr.n_layers
+        st.add_layer_matrix(tr.t_compute[:, None], "compute", "compute")
+        st.add_layer_matrix(tr.t_noc[:, None], "noc", "noc")
+        st.add_layer_matrix(stack[1][:, None], f"dram({self.dram_model})",
+                            "dram-agg")
+        for li in range(L):
+            st.add_layer_event(
+                "layers", f"L{li}:{BOTTLENECKS[which[li]]}", li, 0.0,
+                float(layer_times[li]), "layer",
+                **{b: float(stack[i, li])
+                   for i, b in enumerate(BOTTLENECKS)})
+        st.place_layers(layer_times)
+        st.derive_queue_counters()
+        st.derive_utilization_counters()
+        finishes = np.cumsum(layer_times)
+        for plane, sel in (("wireless", mask), ("wired", ~mask)):
+            per_layer = np.bincount(tr.layer[sel],
+                                    weights=tr.nbytes[sel], minlength=L)
+            cum = np.cumsum(per_layer)
+            st.add_counter(f"bytes:{plane}", 0.0, 0.0)
+            for t, v in zip(finishes, cum):
+                st.add_counter(f"bytes:{plane}", float(t), float(v))
+        st.meta.update(policy=policy_name,
+                       link_model=self.link_model,
+                       dram_model=self.dram_model,
+                       total_time=float(layer_times.sum()))
 
     # ------------------------------------------------------------------
     # batched path: static injection sets, one event pop per layer
@@ -315,16 +365,89 @@ class PacketSim:
         return np.maximum.reduce(
             [self.trace.t_compute, t_dram, self.trace.t_noc, t_nop, t_wl])
 
-    def _run_planned(self, mask: np.ndarray, name: str) -> EventResult:
+    def _run_planned(self, mask: np.ndarray, name: str,
+                     st=None) -> EventResult:
         t_nop, t_wl, t_dram, extra, busies = self._planned_parts(mask)
-        return self._finish(mask, t_nop, t_wl, t_dram, extra, busies, name)
+        if st is not None:
+            self._record_planned(st, mask)
+        return self._finish(mask, t_nop, t_wl, t_dram, extra, busies, name,
+                            st)
+
+    def _record_planned(self, st, mask: np.ndarray) -> None:
+        """Reconstruct the per-packet events a batched layer pop implies.
+
+        The batched path never materialises an event order — per-layer
+        busy totals and maxima fully determine the barrier times — so
+        events are rebuilt post-hoc (only when recording) from the FIFO
+        semantics: within each (layer, resource) queue, packets serve
+        in injection (= trace index) order, begin = frontier +
+        preceding service.  Under spatial reuse the planned costing is
+        ``t_global + max_z t_zone``, i.e. the channel's global phase
+        quiesces first and the zone FIFOs then run concurrently — zone
+        events are offset by their channel's per-layer global busy.
+        The per-resource busy integral of the reconstruction matches
+        `cut_busy`/`channel_busy`/`dram_busy` exactly (pinned to 1e-12
+        in tests/test_obs.py).
+        """
+        tr = self.trace
+
+        def emit(pkt, res, svc, fmt, cat, seg, offset=None):
+            order = np.argsort(seg, kind="stable")   # FIFO: index order
+            ends = segment_cumsum(svc[order], seg[order])
+            for p, r, s, e in zip(pkt[order], res[order], svc[order], ends):
+                off = 0.0 if offset is None else offset(p, r)
+                st.add_layer_event(fmt.format(r), f"p{p}",
+                                   int(tr.layer[p]), off + e - s, float(s),
+                                   cat, bytes=float(tr.nbytes[p]))
+
+        # wired plane
+        if self.link_model != "xy":
+            keep = ~mask[self._x_pkt]
+            pkt, cut = self._x_pkt[keep], self._x_cut[keep]
+            emit(pkt, cut, self._x_add[keep], "cut{}", "wired",
+                 tr.layer[pkt].astype(np.int64) * self.n_cuts + cut)
+        else:
+            epk = tr.inc_msg[np.argsort(tr.inc_msg, kind="stable")]
+            keep = ~mask[epk]
+            pkt, lnk = epk[keep], self._pk_links[keep]
+            emit(pkt, lnk, tr.nbytes[pkt] / self.link_bw, "link{}", "wired",
+                 tr.layer[pkt].astype(np.int64) * tr.n_links + lnk)
+
+        # wireless plane (decoded from the batched FIFO groups)
+        idx, grp, svc, _ = self._wireless_batch(mask)
+        if len(idx):
+            zc = grp % self.n_zcls
+            ch = (grp // self.n_zcls) % self.n_channels
+            if self.n_zcls == 1:
+                tracks = np.array([f"ch{c}" for c in ch])
+                offset = None
+            else:
+                Z = self.n_zones
+                gbusy = np.bincount(
+                    grp[zc == Z] // self.n_zcls, weights=svc[zc == Z],
+                    minlength=tr.n_layers * self.n_channels)
+                tracks = np.array([f"ch{c}/g" if z == Z else f"ch{c}/z{z}"
+                                   for c, z in zip(ch, zc)])
+                lay_ch = dict(zip(idx, grp // self.n_zcls))
+                isglob = dict(zip(idx, zc == Z))
+
+                def offset(p, _r):
+                    return 0.0 if isglob[p] else float(gbusy[lay_ch[p]])
+            emit(idx, tracks, svc, "{}", "wireless", grp, offset)
+
+        # DRAM ports
+        nd = tr.dram_node
+        sel = np.nonzero(nd >= 0)[0]
+        if len(sel):
+            emit(sel, nd[sel], self._dram_svc[sel], "dram{}", "dram",
+                 tr.layer[sel].astype(np.int64) * self.n_dram + nd[sel])
 
     # ------------------------------------------------------------------
     # sequential path: per-packet events (online policies / adaptive links)
     # ------------------------------------------------------------------
 
     def _run_online(self, policy, mask: Optional[np.ndarray],
-                    name: str) -> EventResult:
+                    name: str, st=None) -> EventResult:
         tr, mac = self.trace, self.net.mac
         L, M = tr.n_layers, len(tr.nbytes)
         adaptive = self.link_model == "adaptive"
@@ -361,6 +484,11 @@ class PacketSim:
                 v = tr.nbytes[p]
                 nd = tr.dram_node[p]
                 if nd >= 0:
+                    if st is not None:
+                        st.add_layer_event(f"dram{nd}", f"p{p}", li,
+                                           float(dram_pool.free[nd]),
+                                           float(self._dram_svc[p]), "dram",
+                                           bytes=float(v))
                     dram_pool.serve(np.array([nd]),
                                     np.array([self._dram_svc[p]]))
                 # --- wired projection (uncommitted) ---
@@ -370,8 +498,11 @@ class PacketSim:
                     s = v / self.link_bw
                     trial = linkmat.copy()
                     proj_w = 0.0
+                    slots = [] if st is not None else None
                     for c in cuts:     # each crossing -> least-busy link
                         j = int(trial[c].argmin())
+                        if slots is not None:
+                            slots.append((int(c), j, float(trial[c, j])))
                         trial[c, j] += s
                         proj_w = max(proj_w, trial[c, j])
                 elif xy:
@@ -411,16 +542,39 @@ class PacketSim:
                 if go:
                     injected[p] = True
                     if zc >= self.n_zones:
+                        if st is not None:
+                            st.add_layer_event(f"ch{ch}/g", f"p{p}", li,
+                                               proj_wl - s_wl, s_wl,
+                                               "wireless", bytes=float(v))
                         ch_pool.free[ids_wl] = proj_wl
                     else:
+                        if st is not None:
+                            track = (f"ch{ch}/z{zc}" if self.n_zones > 1
+                                     else f"ch{ch}")
+                            st.add_layer_event(track, f"p{p}", li,
+                                               float(ch_pool.free[ids_wl[0]]),
+                                               s_wl, "wireless",
+                                               bytes=float(v))
                         ch_pool.serve(ids_wl, np.array([s_wl]))
                     wl_airtime[ch] += s_wl
                     ch_srcs[ch][zc].add(int(tr.src[p]))
                     extra_bytes += float(mac_packet_extra_bytes(mac, v,
                                                                 a_now))
                 elif adaptive:
+                    if st is not None:
+                        for c, j, begin in slots:
+                            st.add_layer_event(f"cut{c}/l{j}", f"p{p}", li,
+                                               begin, s, "wired",
+                                               bytes=float(v))
                     linkmat = trial
                 elif len(ids):
+                    if st is not None:
+                        for rid, begin, s1 in zip(
+                                ids, wired_pool.free[ids], svc):
+                            track = (f"link{rid}" if xy else f"cut{rid}")
+                            st.add_layer_event(track, f"p{p}", li,
+                                               float(begin), float(s1),
+                                               "wired", bytes=float(v))
                     wired_pool.serve(ids, svc)
             # --- layer barrier: drain every queue, roll busy ---
             if adaptive:
@@ -445,32 +599,41 @@ class PacketSim:
             link_busy = None
         busies = (cut_busy, wl_airtime, busy_ld.sum(axis=0), link_busy)
         return self._finish(injected, t_nop, t_wl, self._dram_terms(busy_ld),
-                            extra_bytes, busies, name)
+                            extra_bytes, busies, name, st)
 
     # ------------------------------------------------------------------
     # entry points
     # ------------------------------------------------------------------
 
+    def _recorder(self, name: str):
+        """A fresh `SimTrace` when recording, else None (zero cost:
+        the engine paths only ever test this for None)."""
+        if not self.record:
+            return None
+        return obs_trace.SimTrace(label=f"event:{name}:{self.link_model}")
+
     def run(self, policy="static") -> EventResult:
         """Simulate under ``policy`` (name, or a `policies.Policy`)."""
         from .policies import get_policy
         pol = get_policy(policy)
+        st = self._recorder(pol.name)
         mask = pol.plan_trace(self)
         if mask is not None:
             mask = np.asarray(mask, bool)
             if self.link_model != "adaptive":
-                return self._run_planned(mask, pol.name)
-            return self._run_online(pol, mask, pol.name)
-        return self._run_online(pol, None, pol.name)
+                return self._run_planned(mask, pol.name, st)
+            return self._run_online(pol, mask, pol.name, st)
+        return self._run_online(pol, None, pol.name, st)
 
     def run_wired(self) -> EventResult:
         """All-wired baseline (the speedup denominator), cached."""
         if self._wired_cache is None:
             mask = np.zeros(len(self.trace.nbytes), bool)
+            st = self._recorder("wired")
             if self.link_model != "adaptive":
-                self._wired_cache = self._run_planned(mask, "wired")
+                self._wired_cache = self._run_planned(mask, "wired", st)
             else:
-                self._wired_cache = self._run_online(None, mask, "wired")
+                self._wired_cache = self._run_online(None, mask, "wired", st)
         return self._wired_cache
 
     def speedup(self, policy="static") -> float:

@@ -1,0 +1,409 @@
+"""Observability plane: recorder, exports, metrics, attribution, gate.
+
+- golden hand-computed event timestamps on the 2-chiplet/3-packet trace
+  from tests/test_sim.py,
+- the busy-time invariant: per-resource trace durations == the engine's
+  own busy aggregates to 1e-12 for every link model,
+- Chrome Trace Event JSON schema validity + lossless .npz round trip,
+- record=False is structurally zero-cost (no SimTrace is ever built),
+- the shared degenerate convention (`bottleneck_share` -> {},
+  attribution -> []),
+- metrics registry / logger / provenance stamps,
+- the benchmarks/run.py --check regression gate.
+"""
+
+import json
+
+import numpy as np
+import pytest
+from test_sim import NET96, _golden_trace
+
+from repro.core import ChannelPlan, NetworkConfig, balance, make_trace
+from repro.core.dse import policy_sweep_all
+from repro.core.simulator import SimResult, simulate_wired
+from repro.obs import (SimTrace, attribution_report, attribution_summary,
+                       chrome_trace_events, config_hash, export_npz,
+                       format_attribution, load_npz, make_provenance,
+                       recording, utilization_timeline)
+from repro.obs.metrics import MetricsRegistry
+from repro.sim import EventResult, PacketSim
+from repro.sim.policies import FixedPolicy
+
+REUSE_NET = NetworkConfig(bandwidth=96e9 / 8,
+                          channels=ChannelPlan(n_channels=2, reuse_zones=4))
+
+
+# ---------------------------------------------------------------------------
+# golden hand-trace: exact event timestamps
+# ---------------------------------------------------------------------------
+
+def test_golden_wired_event_timestamps():
+    """Wired baseline: p0 then p1 FIFO on cut 0, p2 alone on cut 1.
+
+    4 MB at 4 GB/s = 1 ms per eligible packet, 2 MB = 0.5 ms."""
+    sim = PacketSim(_golden_trace(), NET96, record=True)
+    res = sim.run_wired()
+    st = res.trace
+    assert st is not None and st.label == "event:wired:striped"
+
+    by_track = {}
+    for ev in st.events:
+        if ev.cat == "wired":
+            by_track.setdefault(ev.track, []).append(ev)
+    c0 = sorted(by_track["cut0"], key=lambda e: e.ts)
+    assert [(e.name, e.ts, e.dur) for e in c0] == [
+        ("p0", 0.0, pytest.approx(1e-3)),
+        ("p1", pytest.approx(1e-3), pytest.approx(1e-3)),
+    ]
+    (c1,) = by_track["cut1"]
+    assert (c1.name, c1.ts, c1.dur) == ("p2", 0.0, pytest.approx(0.5e-3))
+    # the layer span covers the 2 ms NoP bottleneck
+    assert st.layer_windows() == {0: (0.0, pytest.approx(2e-3))}
+    assert st.meta["policy"] == "wired"
+
+
+def test_golden_fixed_wireless_event():
+    """[False, True, False]: p1 rides channel 0 for 4 MB / 12 GB/s."""
+    sim = PacketSim(_golden_trace(), NET96, record=True)
+    res = sim.run(FixedPolicy([False, True, False]))
+    st = res.trace
+    wl = [ev for ev in st.events if ev.cat == "wireless"]
+    assert [(e.track, e.name, e.ts) for e in wl] == [("ch0", "p1", 0.0)]
+    assert wl[0].dur == pytest.approx(4e6 / (96e9 / 8))
+    # p0 now has cut 0 to itself; compute floor (1 ms) wins the layer
+    c0 = [ev for ev in st.events if ev.track == "cut0"]
+    assert [(e.name, e.ts, e.dur) for e in c0] == [
+        ("p0", 0.0, pytest.approx(1e-3))]
+    assert st.layer_windows()[0][1] == pytest.approx(1e-3)
+
+
+# ---------------------------------------------------------------------------
+# busy-time invariant: trace == engine aggregates, to 1e-12
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workload", ["zfnet", "smollm_360m:prefill"])
+@pytest.mark.parametrize("link_model", ["striped", "adaptive", "xy"])
+def test_busy_invariant(workload, link_model):
+    tr = make_trace(workload)
+    for net in (NET96, REUSE_NET):
+        sim = PacketSim(tr, net, link_model=link_model, record=True)
+        for run in (sim.run_wired(), sim.run("greedy")):
+            st = run.trace
+            if link_model == "xy":
+                link = st.busy_by_resource("wired", len(run.link_busy),
+                                           "link")
+                np.testing.assert_allclose(link, run.link_busy,
+                                           rtol=1e-12, atol=0.0)
+                wired = np.bincount(sim.cut_of_link, weights=link,
+                                    minlength=sim.n_cuts)
+            else:
+                wired = st.busy_by_resource("wired", sim.n_cuts, "cut")
+            np.testing.assert_allclose(wired, run.cut_busy,
+                                       rtol=1e-12, atol=0.0)
+            ch = st.busy_by_resource("wireless",
+                                     net.channels.n_channels, "ch")
+            np.testing.assert_allclose(ch, run.channel_busy,
+                                       rtol=1e-12, atol=0.0)
+            dram = st.busy_by_resource("dram", len(run.dram_busy), "dram")
+            np.testing.assert_allclose(dram, run.dram_busy,
+                                       rtol=1e-12, atol=0.0)
+
+
+def test_recording_does_not_change_results():
+    tr = make_trace("zfnet")
+    for policy in ("static", "greedy"):
+        off = PacketSim(tr, REUSE_NET).run(policy)
+        on = PacketSim(tr, REUSE_NET, record=True).run(policy)
+        assert off.trace is None and on.trace is not None
+        assert off.total_time == on.total_time
+        np.testing.assert_array_equal(off.layer_times, on.layer_times)
+        np.testing.assert_array_equal(off.injected, on.injected)
+
+
+def test_disabled_mode_is_structurally_zero_cost(monkeypatch):
+    """record=False must never even construct a SimTrace."""
+    from repro.sim import engine
+
+    def boom(*a, **k):
+        raise AssertionError("SimTrace built with record=False")
+
+    monkeypatch.setattr(engine.obs_trace, "SimTrace", boom)
+    sim = PacketSim(_golden_trace(), NET96)
+    assert sim.run("greedy").trace is None
+    assert sim.run_wired().trace is None
+    with pytest.raises(AssertionError):
+        PacketSim(_golden_trace(), NET96, record=True).run("greedy")
+
+
+# ---------------------------------------------------------------------------
+# exports
+# ---------------------------------------------------------------------------
+
+def _recorded_run():
+    sim = PacketSim(make_trace("zfnet"), REUSE_NET, record=True)
+    return sim.run("static")
+
+
+def test_chrome_trace_schema():
+    res = _recorded_run()
+    st_an = SimTrace(label="analytic")
+    with recording(st_an):
+        simulate_wired(make_trace("zfnet"))
+    obj = chrome_trace_events({"event": res.trace, "analytic": st_an})
+    assert obj["displayTimeUnit"] == "ms"
+    assert json.loads(json.dumps(obj)) is not None   # serialisable
+    phases = {"M": 0, "X": 0, "C": 0}
+    for ev in obj["traceEvents"]:
+        assert ev["ph"] in phases
+        phases[ev["ph"]] += 1
+        assert isinstance(ev["pid"], int)
+        if ev["ph"] == "X":
+            assert {"name", "ts", "dur", "tid", "cat", "args"} <= set(ev)
+            assert ev["ts"] >= 0.0 and ev["dur"] >= 0.0
+        elif ev["ph"] == "M":
+            assert ev["name"] in ("process_name", "thread_name",
+                                  "process_sort_index")
+        else:
+            assert "value" in ev["args"]
+    assert phases["X"] > 0 and phases["M"] > 0 and phases["C"] > 0
+    # merged traces land in distinct process-id blocks
+    an_pids = {ev["pid"] for ev in obj["traceEvents"]
+               if ev.get("cat", "").startswith("an:")}
+    ev_pids = {ev["pid"] for ev in obj["traceEvents"]
+               if ev.get("cat", "") in ("wired", "wireless", "dram")}
+    assert not (an_pids & ev_pids)
+
+
+def test_npz_round_trip_is_lossless(tmp_path):
+    st = _recorded_run().trace
+    path = tmp_path / "trace.npz"
+    export_npz(st, str(path))
+    back = load_npz(str(path))
+    assert back.label == st.label
+    assert back.meta == st.meta
+    assert len(back.events) == len(st.events)
+    for a, b in zip(st.events, back.events):
+        assert a.__dict__ == b.__dict__
+    assert back.counters == st.counters
+
+
+# ---------------------------------------------------------------------------
+# degenerate convention: {} / []
+# ---------------------------------------------------------------------------
+
+def test_zero_time_bottleneck_share_is_empty():
+    ev = EventResult(
+        total_time=0.0, layer_times=np.zeros(0), layer_finish=np.zeros(0),
+        bottleneck=[], injected=np.zeros(0, bool), wireless_bytes=0.0,
+        wireless_energy_j=0.0, energy_j=0.0, cut_busy=np.zeros(2),
+        channel_busy=np.zeros(1), dram_busy=np.zeros(1), link_busy=None,
+        policy="static", link_model="striped", dram_model="pooled")
+    assert ev.bottleneck_share() == {}
+    assert SimResult(0.0, np.zeros(0), []).bottleneck_share() == {}
+    assert attribution_report(SimTrace()) == []
+    assert format_attribution([]) == "(empty trace)"
+
+
+# ---------------------------------------------------------------------------
+# attribution + timelines
+# ---------------------------------------------------------------------------
+
+def test_attribution_golden_wired():
+    res = PacketSim(_golden_trace(), NET96, record=True).run_wired()
+    rows = {r["track"]: r for r in attribution_report(res)}
+    c0 = rows["cut0"]
+    # p0 waits 0, p1 waits 1 ms; both serve 1 ms each
+    assert c0["n_events"] == 2
+    assert c0["service_s"] == pytest.approx(2e-3)
+    assert c0["queue_s"] == pytest.approx(1e-3)
+    assert c0["finish_s"] == pytest.approx(2e-3)
+    assert c0["why"] == "service"
+    assert rows["cut1"]["idle_s"] == pytest.approx(1.5e-3)
+    summary = attribution_summary(res)
+    assert summary["nop"]["share"] == pytest.approx(1.0)
+    assert summary["nop"]["track"] == "cut0"
+    assert "cut0" in format_attribution(attribution_report(res))
+
+
+def test_attribution_reuse_quiesce_column():
+    """Reuse-zone runs expose the global-phase quiesce decomposition."""
+    res = PacketSim(make_trace("smollm_360m:prefill"), REUSE_NET,
+                    record=True).run("greedy")
+    zone_rows = [r for r in attribution_report(res)
+                 if "/z" in r["track"]]
+    assert zone_rows, "reuse run should produce zone-server rows"
+    assert any(r["quiesce_s"] > 0.0 for r in zone_rows)
+    for r in zone_rows:
+        assert 0.0 <= r["quiesce_s"] <= r["queue_s"] + 1e-15
+
+
+def test_utilization_timeline_golden():
+    res = PacketSim(_golden_trace(), NET96, record=True).run_wired()
+    edges, util = utilization_timeline(res.trace, "wired", n_bins=4)
+    assert edges[-1] == pytest.approx(2e-3)
+    np.testing.assert_allclose(util["cut0"], [1, 1, 1, 1])
+    np.testing.assert_allclose(util["cut1"], [1, 0, 0, 0])
+
+
+def test_queue_and_utilization_counters():
+    st = PacketSim(_golden_trace(), NET96, record=True).run_wired().trace
+    # wired queue: both cut queues drain 0-deep by the layer end
+    q = dict(st.counters)["q:wired"]
+    assert q[0] == (0.0, 3.0) and q[-1][1] == 0.0
+    assert any(t.startswith("util:cut") for t in st.counters)
+
+
+# ---------------------------------------------------------------------------
+# analytic plane recording
+# ---------------------------------------------------------------------------
+
+def test_analytic_recorder_layer_windows():
+    tr = make_trace("zfnet")
+    st = SimTrace(label="analytic")
+    with recording(st):
+        res = simulate_wired(tr)
+    windows = st.layer_windows()
+    assert len(windows) == tr.n_layers
+    assert sum(w[1] for w in windows.values()) == pytest.approx(
+        res.total_time)
+    assert st.tracks("an:compute") == ["compute"]
+
+
+def test_balancer_emits_one_timeline():
+    """Trial evaluations are masked: exactly one span per layer."""
+    tr = _golden_trace()
+    st = SimTrace(label="balancer")
+    with recording(st):
+        bal = balance(tr, NET96)
+    layer_spans = [ev for ev in st.events if ev.cat == "layer"]
+    decisions = [ev for ev in st.events if ev.track == "balance"]
+    assert len(layer_spans) == tr.n_layers
+    assert len(decisions) == tr.n_layers
+    assert {"t_grid", "t_greedy"} <= set(decisions[0].args)
+    assert sum(w[1] for w in st.layer_windows().values()) == pytest.approx(
+        bal.sim.total_time)
+
+
+def test_recording_none_masks_outer_recorder():
+    st = SimTrace()
+    with recording(st), recording(None):
+        simulate_wired(_golden_trace())
+    assert len(st) == 0
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + logger
+# ---------------------------------------------------------------------------
+
+def test_metrics_registry_kinds_and_report():
+    reg = MetricsRegistry()
+    reg.counter("hits", route="a").inc()
+    reg.counter("hits", route="a").inc(2.0)
+    reg.gauge("depth").set(7)
+    reg.histogram("lat").observe(0.25)
+    with reg.span("work", stage="x") as t:
+        pass
+    assert t["seconds"] >= 0.0
+    rep = reg.report()
+    assert rep["hits"][0]["value"] == 3.0
+    assert rep["depth"][0]["value"] == 7.0
+    assert rep["lat"][0]["count"] == 1
+    assert rep["work"][0]["labels"] == {"stage": "x"}
+    with pytest.raises(ValueError):
+        reg.gauge("hits", route="a")
+    reg.reset()
+    assert reg.report() == {}
+
+
+def test_metrics_logger(capsys):
+    reg = MetricsRegistry()
+    log = reg.logger("driver")
+    log.info("step done", step=3, loss=1.5)
+    log.warning("slow")
+    out = capsys.readouterr().out
+    assert "step done step=3 loss=1.5" in out
+    assert "WARNING: slow" in out
+    rep = reg.report()
+    levels = {tuple(sorted(m["labels"].items())): m["value"]
+              for m in rep["log.messages"]}
+    assert levels[(("level", "info"), ("logger", "driver"))] == 1.0
+    assert rep["driver.step"][0]["value"] == 3.0
+
+
+# ---------------------------------------------------------------------------
+# provenance
+# ---------------------------------------------------------------------------
+
+def test_config_hash_deterministic():
+    cfg = {"net": NET96, "grid": np.arange(4), "k": (1, 2)}
+    h1, h2 = config_hash(cfg), config_hash(cfg)
+    assert h1 == h2 and len(h1) == 16
+    assert config_hash({**cfg, "k": (1, 3)}) != h1
+
+
+def test_provenance_stamped_on_sweeps():
+    tr = _golden_trace()
+    (r,) = policy_sweep_all({"golden": tr}, NET96, policies=("static",))
+    prov = r.provenance
+    assert prov["kind"] == "dse.policy_sweep_all"
+    assert prov["points_evaluated"] == 2      # static + wired baseline
+    assert prov["wall_time_s"] > 0.0
+    assert len(prov["config_hash"]) == 16
+
+
+def test_provenance_stamped_on_anneal():
+    from test_arch import _tiny_problem
+
+    from repro.arch.placement import anneal
+    r = anneal(_tiny_problem(), "hybrid", seed=3, steps=20, restarts=1)
+    prov = r.provenance
+    assert prov["kind"] == "arch.anneal"
+    assert prov["seed"] == 3
+    assert prov["points_evaluated"] > 0
+    assert make_provenance("x", {})["points_evaluated"] == 0
+
+
+# ---------------------------------------------------------------------------
+# bench regression gate
+# ---------------------------------------------------------------------------
+
+run_mod = pytest.importorskip("benchmarks.run")
+
+
+def test_parse_derived():
+    got = run_mod.parse_derived(
+        "a=1.25;b=12.3%;c=2.29x;d=13/15;e=True;f=False;g=1.1e-16")
+    assert got == {"a": 1.25, "b": 12.3, "c": 2.29,
+                   "d": pytest.approx(13 / 15), "e": 1.0, "f": 0.0,
+                   "g": 1.1e-16}
+
+
+def _fake_rows(value):
+    return [("row", lambda: value,
+             lambda v: "m=%.2f;frac=%d/%d" % (v, 1, 2))]
+
+
+def test_check_rows_pass_and_fail(capsys):
+    committed = {"_bench_meta": {"row": {"derived": "m=1.00;frac=1/2"}}}
+    assert run_mod.check_rows(_fake_rows(1.0), committed) == 0
+    assert run_mod.check_rows(_fake_rows(1.2), committed) == 1
+    err = capsys.readouterr().err
+    assert "BENCH CHECK FAILED" in err and "m" in err
+    # a row absent from the committed meta is itself a failure
+    assert run_mod.check_rows(_fake_rows(1.0), {"_bench_meta": {}}) == 1
+
+
+def test_bench_check_end_to_end(tmp_path, capsys):
+    path = tmp_path / "bench.json"
+    assert run_mod.main(["--only", "mapping_sensitivity",
+                         "--file", str(path)]) == 0
+    assert run_mod.main(["--check", "--only", "mapping_sensitivity",
+                         "--file", str(path)]) == 0
+    data = json.loads(path.read_text())
+    meta = data[run_mod.META_KEY]["mapping_sensitivity"]
+    assert meta["us_per_call"] > 0.0
+    meta["derived"] = "mac_only/comm_aware=9.99x"
+    path.write_text(json.dumps(data))
+    assert run_mod.main(["--check", "--only", "mapping_sensitivity",
+                         "--file", str(path)]) == 1
+    capsys.readouterr()
