@@ -1,0 +1,81 @@
+"""Trend printer for the bench-history ledger.
+
+``benchmarks/run.py`` appends one JSONL line per (run, row) to
+``experiments/bench_history.jsonl``; this tool renders the trajectory
+of any metric as a text sparkline per row — the zero-dependency answer
+to "did that refactor move the benchmarks?".
+
+Usage:
+  PYTHONPATH=src python benchmarks/history.py --plot-text
+  PYTHONPATH=src python benchmarks/history.py --plot-text \
+      --row fig_critpath_whatif --metric mean_div --last 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+BARS = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values) -> str:
+    lo, hi = min(values), max(values)
+    if hi == lo:
+        return BARS[0] * len(values)
+    return "".join(BARS[int((v - lo) / (hi - lo) * (len(BARS) - 1))]
+                   for v in values)
+
+
+def plot_text(entries, row=None, metric=None, last=30, file=sys.stdout):
+    """One line per (row, metric): sparkline + first/latest values."""
+    series = {}
+    for e in entries:
+        if row and e.get("row") != row:
+            continue
+        for k, v in (e.get("metrics") or {}).items():
+            if metric and k != metric:
+                continue
+            series.setdefault((e["row"], k), []).append(float(v))
+    if not series:
+        print("no matching history entries", file=file)
+        return
+    wid = max(len(f"{r}.{k}") for r, k in series)
+    for (r, k), vals in sorted(series.items()):
+        vals = vals[-last:]
+        print(f"{f'{r}.{k}':{wid}s}  {sparkline(vals)}  "
+              f"{vals[0]:g} -> {vals[-1]:g}  (n={len(vals)})", file=file)
+
+
+def main(argv=None) -> int:
+    from benchmarks.run import history_path, load_history
+    default = history_path(os.path.join(os.path.dirname(__file__), "..",
+                                        "experiments",
+                                        "bench_results.json"))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--plot-text", action="store_true",
+                    help="render each metric's trajectory as a sparkline")
+    ap.add_argument("--file", default=default,
+                    help="history ledger (default: %(default)s)")
+    ap.add_argument("--row", default=None, help="restrict to one row")
+    ap.add_argument("--metric", default=None,
+                    help="restrict to one metric key")
+    ap.add_argument("--last", type=int, default=30,
+                    help="plot at most the last N runs (default 30)")
+    args = ap.parse_args(argv)
+    entries = load_history(args.file)
+    if not entries:
+        print(f"no history at {args.file}", file=sys.stderr)
+        return 1
+    if args.plot_text:
+        plot_text(entries, args.row, args.metric, args.last)
+    else:
+        rows = sorted({e.get("row") for e in entries if "row" in e})
+        print(f"{len(entries)} entries, {len(rows)} rows: "
+              + ", ".join(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -108,6 +108,73 @@ def fig_sim_policies(traces=None) -> dict:
     return policy_report(traces or _traces())
 
 
+#: LLM phases the critical-path/what-if figure adds to the 15 paper
+#: workloads (the cheapest LLM pair — the row runs in the --check gate)
+CRITPATH_LLM_WORKLOADS = ("smollm_360m:prefill", "smollm_360m:decode")
+
+#: pinned workloads the guided sweep is validated on (same set as
+#: tests/test_critpath.py)
+GUIDED_WORKLOADS = ("zfnet", "resnet50", "gnmt")
+
+
+def fig_critpath_whatif(traces=None) -> dict:
+    """Beyond-paper decision figure: what is *binding* vs what is *busy*,
+    and how far trace-driven projection can be trusted.
+
+    Per workload (15 paper + 2 LLM phases), one recorded event run at
+    96 Gb/s: the critical-path share vs raw busy share per plane (their
+    total-variation divergence is the headline — a large value means a
+    utilization-driven balancer would optimise the wrong plane), the
+    critical-path-sum == makespan invariant, and the what-if projection
+    error against actual re-simulation for ±25% wireless bandwidth.
+    Also reports `dse.whatif_guided` vs exhaustive `sweep_all` on the
+    pinned golden workloads: same best point, fraction of the grid
+    evaluated.
+    """
+    from repro.core import NetworkConfig
+    from repro.core.dse import whatif_guided
+    from repro.obs import WhatIf, critical_path, critical_vs_busy, validate
+    from repro.sim import PacketSim
+    traces = dict(traces or _traces())    # copy: rows share the cache
+    for wl in CRITPATH_LLM_WORKLOADS:
+        traces.setdefault(wl, make_trace(wl))
+    net = NetworkConfig(bandwidth=96e9 / 8)
+    out = {}
+    for wl, tr in traces.items():
+        r = PacketSim(tr, net, record=True).run("static")
+        cp = critical_path(r.trace)
+        cvb = critical_vs_busy(r.trace, cp)
+        errs = {s: validate(tr, net, WhatIf(wireless_scale=s))["error"]
+                for s in (0.75, 1.25)}
+        out[wl] = {
+            "divergence": cvb["divergence"],
+            "critical_top": max(cvb["critical"], key=cvb["critical"].get),
+            "busy_top": max(cvb["busy"], key=cvb["busy"].get),
+            "proj_err_bw075": errs[0.75],
+            "proj_err_bw125": errs[1.25],
+            "critpath_sum_ok": bool(
+                abs(cp.total - r.total_time) <= 1e-12 * r.total_time),
+        }
+    golden = {wl: traces[wl] for wl in GUIDED_WORKLOADS}
+    guided = whatif_guided(golden)
+    exhaustive = sweep_all(golden)
+    ex_best = {(r.workload, r.bandwidth_gbps):
+               (r.best_threshold, r.best_injection) for r in exhaustive}
+    g_best = {(r.workload, r.bandwidth_gbps):
+              (r.best_threshold, r.best_injection) for r in guided.results}
+    rows = [v for v in out.values() if isinstance(v, dict)]
+    out["_summary"] = {
+        "mean_divergence": sum(r["divergence"] for r in rows) / len(rows),
+        "max_divergence": max(r["divergence"] for r in rows),
+        "worst_proj_err": max(max(r["proj_err_bw075"],
+                                  r["proj_err_bw125"]) for r in rows),
+        "all_sum_ok": all(r["critpath_sum_ok"] for r in rows),
+        "guided_matches_exhaustive": ex_best == g_best,
+        "guided_fraction": guided.evaluated_fraction,
+    }
+    return out
+
+
 LLM_FIG_WORKLOADS = (
     "smollm_360m:prefill", "smollm_360m:decode",
     "gemma2_2b:prefill", "gemma2_2b:decode",

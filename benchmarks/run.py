@@ -10,7 +10,13 @@ so the perf trajectory is machine-readable from the committed file.
 requested rows (all rows with committed metrics when no ``--only`` is
 given), parses each derived metric numerically, and exits non-zero with
 a readable delta table if anything drifts beyond the row's tolerance
-from the committed ``bench_results.json``.  Check mode never writes."""
+from the committed ``bench_results.json``.  Check mode never writes.
+
+Every write run also appends one line per row to
+``experiments/bench_history.jsonl`` (wall time, derived metrics,
+provenance hash) — the long-horizon perf ledger ``benchmarks/history.py
+--plot-text`` renders, and the fallback ``--check`` gates against when
+the results file lacks ``_bench_meta``."""
 
 from __future__ import annotations
 
@@ -69,6 +75,59 @@ def _run(name, fn, derived_fn):
     derived = derived_fn(result)
     print(f"{name},{us:.0f},{derived}")
     return result, {"us_per_call": round(us, 1), "derived": derived}
+
+
+# ---------------------------------------------------------------------------
+# run history: one JSONL line per (run, row), appended on every write run
+# ---------------------------------------------------------------------------
+
+def history_path(results_file: str) -> str:
+    """The history ledger lives next to the results file."""
+    return os.path.join(os.path.dirname(results_file) or ".",
+                        "bench_history.jsonl")
+
+
+def append_history(path: str, meta: dict) -> None:
+    """Append one line per row: wall time, derived metrics (raw string
+    and parsed), and the provenance hash of the row's outcome."""
+    from repro.obs.provenance import config_hash
+    ts = time.time()
+    with open(path, "a") as f:
+        for name, m in sorted(meta.items()):
+            f.write(json.dumps({
+                "ts": round(ts, 3),
+                "row": name,
+                "us_per_call": m["us_per_call"],
+                "derived": m["derived"],
+                "metrics": parse_derived(m["derived"]),
+                "hash": config_hash({"row": name,
+                                     "derived": m["derived"]}),
+            }, sort_keys=True) + "\n")
+
+
+def load_history(path: str) -> list:
+    """All parseable entries of the ledger, oldest first."""
+    entries = []
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    entries.append(json.loads(line))
+                except json.JSONDecodeError:
+                    continue       # a torn tail line never blocks --check
+    return entries
+
+
+def latest_by_row(entries: list) -> dict:
+    """row -> its most recent ledger entry."""
+    out = {}
+    for e in entries:
+        if "row" in e:
+            out[e["row"]] = e
+    return out
 
 
 def check_rows(rows, committed: dict, rtol: float | None = None) -> int:
@@ -166,6 +225,16 @@ def main(argv=None) -> int:
              r["_summary"]["adaptive"]["beats_grid"],
              r["_summary"]["greedy"]["beats_grid"],
              100 * (r["_summary"]["adaptive"]["mean_speedup"] - 1))),
+        ("fig_critpath_whatif",
+         lambda: paper_figs.fig_critpath_whatif(traces()),
+         lambda r: "mean_div=%.3f;max_div=%.3f;worst_proj_err=%.2f%%;"
+         "sum_ok=%s;guided_match=%s;guided_frac=%.2f" % (
+             r["_summary"]["mean_divergence"],
+             r["_summary"]["max_divergence"],
+             100 * r["_summary"]["worst_proj_err"],
+             r["_summary"]["all_sum_ok"],
+             r["_summary"]["guided_matches_exhaustive"],
+             r["_summary"]["guided_fraction"])),
         ("llm_collectives",
          paper_figs.fig_llm_collectives,
          lambda r: "prefill_mean96=%.1f%%;decode_mean96=%.1f%%;"
@@ -250,12 +319,26 @@ def main(argv=None) -> int:
                                     "experiments", "bench_results.json")
 
     if args.check:
-        if not os.path.exists(out):
-            print(f"bench check: no committed results at {out}",
+        committed = {}
+        if os.path.exists(out):
+            with open(out) as f:
+                committed = json.load(f)
+        if not committed.get(META_KEY):
+            # results file absent or predates _bench_meta: fall back to
+            # the latest bench_history.jsonl entry per row
+            hist = latest_by_row(load_history(history_path(out)))
+            if not hist:
+                print(f"bench check: no committed results at {out} and "
+                      f"no history at {history_path(out)}",
+                      file=sys.stderr)
+                return 2
+            print(f"bench check: {out} lacks {META_KEY}; falling back "
+                  "to the latest bench_history.jsonl entries",
                   file=sys.stderr)
-            return 2
-        with open(out) as f:
-            committed = json.load(f)
+            committed[META_KEY] = {
+                row: {"derived": e["derived"],
+                      "us_per_call": e.get("us_per_call", 0.0)}
+                for row, e in hist.items()}
         if not args.only:   # default: gate every row with committed meta
             rows = [r for r in rows
                     if r[0] in committed.get(META_KEY, {})]
@@ -276,6 +359,7 @@ def main(argv=None) -> int:
     merged.setdefault(META_KEY, {}).update(meta)
     with open(out, "w") as f:
         json.dump(merged, f, indent=1, sort_keys=True, default=str)
+    append_history(history_path(out), meta)
     return 0
 
 

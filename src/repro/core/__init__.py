@@ -14,6 +14,7 @@ from .wireless import (WirelessConfig, select_wireless, eligibility,
 from .simulator import (SimResult, make_trace, simulate_hybrid,
                         simulate_wired, speedup)
 from .dse import (sweep, sweep_all, summary, SweepResult,
+                  whatif_guided, GuidedSweepResult,
                   network_sweep, network_sweep_all, network_summary,
                   NetworkSweepResult, batched_design_space,
                   policy_sweep, policy_sweep_all, PolicySweepResult,
@@ -60,6 +61,7 @@ __all__ = [
     "NetworkConfig", "ChannelPlan", "MacConfig", "as_network",
     "SimResult", "make_trace", "simulate_hybrid", "simulate_wired",
     "speedup", "sweep", "sweep_all", "summary", "SweepResult",
+    "whatif_guided", "GuidedSweepResult",
     "network_sweep", "network_sweep_all", "network_summary",
     "NetworkSweepResult", "batched_design_space",
     "policy_sweep", "policy_sweep_all", "PolicySweepResult",

@@ -36,6 +36,7 @@ from repro.launch import roofline as RL
 from repro.launch.unit_programs import (decode_unit_programs,
                                         train_unit_programs)
 from repro.models import build_model
+from repro.obs.metrics import get_logger
 from repro.optim.optimizers import OptimizerConfig
 from repro.runtime.sharding import (cache_shardings, logical_batch_shardings,
                                     params_shardings, state_shardings)
@@ -45,6 +46,8 @@ import contextlib
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")
+
+log = get_logger("launch.dryrun")
 
 
 def optimizer_for(cfg: ModelConfig) -> OptimizerConfig:
@@ -302,8 +305,7 @@ def main():
             if args.skip_existing and os.path.exists(fn):
                 try:
                     if json.load(open(fn)).get("status") == "ok":
-                        print(f"{a:22s} {s:12s} {mk:8s} skip (exists)",
-                              flush=True)
+                        log.info(f"{a:22s} {s:12s} {mk:8s} skip (exists)")
                         continue
                 except Exception:
                     pass
@@ -311,14 +313,15 @@ def main():
                          not args.no_roofline, args.out)
             dom = r.get("roofline", {}).get("dominant", "-")
             mem = r.get("memory", {}).get("argument_size_in_bytes", 0)
-            print(f"{a:22s} {s:12s} {mk:8s} {r['status']:5s} "
-                  f"args/dev={mem/2**30:7.2f}GiB dominant={dom:10s} "
-                  f"{r['seconds']:6.1f}s", flush=True)
+            log.info(f"{a:22s} {s:12s} {mk:8s} {r['status']:5s} "
+                     f"args/dev={mem/2**30:7.2f}GiB dominant={dom:10s} "
+                     f"{r['seconds']:6.1f}s",
+                     seconds=r["seconds"])
             if r["status"] != "ok":
                 failures += 1
-                print(r["error"])
-    print(f"done: {len(targets) * len(meshes) - failures} ok, "
-          f"{failures} failed")
+                log.error(r["error"])
+    log.info(f"done: {len(targets) * len(meshes) - failures} ok, "
+             f"{failures} failed", failures=failures)
     raise SystemExit(1 if failures else 0)
 
 

@@ -19,10 +19,18 @@ requested (`PacketSim(..., record=True)`) or installed
   logging adapter and span timers; time-binned utilization timelines;
   the attribution report that decomposes each layer's span into
   service vs queueing vs quiescence per resource.
+- `critpath`   — critical-path extraction over the recorded dependency
+  DAG (`TraceEvent.deps`): which busy time actually *bounds* the
+  makespan, per resource and per plane, against the raw busy shares.
+- `whatif`     — trace-driven what-if projection: replay the recorded
+  layer terms under scaled wireless/DRAM/wired resources or a new
+  channel plan, with a re-simulation validation harness.
 - `provenance` — `dse.provenance` records (config hash, seed, wall
   time, points evaluated) stamped into every sweep result.
 """
 
+from .critpath import (CriticalPath, CritSegment, busy_shares,
+                       critical_path, critical_vs_busy, mark_critical)
 from .export import (chrome_trace_events, export_chrome_trace, export_npz,
                      load_npz)
 from .metrics import (DEFAULT_REGISTRY, MetricsRegistry, attribution_report,
@@ -30,6 +38,7 @@ from .metrics import (DEFAULT_REGISTRY, MetricsRegistry, attribution_report,
                       utilization_timeline)
 from .provenance import config_hash, make_provenance
 from .trace import SimTrace, TraceEvent, active_recorder, recording
+from .whatif import Projection, WhatIf, project, project_grid, validate
 
 __all__ = [
     "SimTrace", "TraceEvent", "active_recorder", "recording",
@@ -37,5 +46,8 @@ __all__ = [
     "DEFAULT_REGISTRY", "MetricsRegistry", "attribution_report",
     "attribution_summary", "format_attribution", "get_logger",
     "utilization_timeline",
+    "CriticalPath", "CritSegment", "busy_shares", "critical_path",
+    "critical_vs_busy", "mark_critical",
+    "Projection", "WhatIf", "project", "project_grid", "validate",
     "config_hash", "make_provenance",
 ]

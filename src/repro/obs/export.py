@@ -28,7 +28,10 @@ _PLANE_PIDS = {
     "layer": 0, "compute": 1, "noc": 2, "dram-agg": 3,
     "wired": 4, "wireless": 5, "dram": 6, "balancer": 7,
 }
-_COUNTER_PID = 8
+_CRIT_PID = 8             # critical-path swim-lane (obs.critpath marks)
+_COUNTER_PID = 9
+_OTHER_PID = 10           # unrecognised planes (was colliding with
+#                           the counter pid when it was len(_PLANE_PIDS))
 _PID_STRIDE = 16          # per-trace offset when merging several traces
 
 
@@ -63,8 +66,9 @@ def chrome_trace_events(
                                "args": {"name": track}})
             return tids[key]
 
-        def pid_of(plane: str) -> int:
-            pid = base + _PLANE_PIDS.get(plane, len(_PLANE_PIDS))
+        def pid_of(plane: str, pid_override: int | None = None) -> int:
+            pid = base + (_PLANE_PIDS.get(plane, _OTHER_PID)
+                          if pid_override is None else pid_override)
             if pid not in pids_used:
                 pids_used[pid] = plane
                 events.append({"ph": "M", "pid": pid, "name": "process_name",
@@ -84,6 +88,17 @@ def chrome_trace_events(
                 "pid": pid, "tid": tid_of(pid, ev.track),
                 "ts": ev.ts * 1e6, "dur": ev.dur * 1e6, "args": args,
             })
+            if ev.args.get("critical"):
+                # mirror onto the critical-path process so the blocking
+                # chain (obs.critpath.mark_critical) reads as one
+                # swim-lane in Perfetto
+                crit = pid_of("critpath", _CRIT_PID)
+                events.append({
+                    "ph": "X", "name": f"{ev.name}@{ev.track}",
+                    "cat": "critpath", "pid": crit,
+                    "tid": tid_of(crit, "critical path"),
+                    "ts": ev.ts * 1e6, "dur": ev.dur * 1e6, "args": args,
+                })
         cpid = base + _COUNTER_PID
         for track, samples in sorted(st.counters.items()):
             if samples and cpid not in pids_used:
@@ -136,6 +151,11 @@ def export_npz(st: SimTrace, path: str) -> None:
         ev_dur=np.array([ev.dur for ev in st.events]),
         ev_layer=np.array([ev.layer for ev in st.events], np.int32),
         ev_args=np.array(args, dtype=object),
+        ev_eid=np.array([ev.eid for ev in st.events], np.int64),
+        # ragged dependency lists stored flat + per-event lengths
+        ev_dep_lens=np.array([len(ev.deps) for ev in st.events], np.int64),
+        ev_deps=np.array([d for ev in st.events for d in ev.deps],
+                         np.int64),
         counter_tracks=np.array(ctracks, dtype=object),
         counter_lens=np.array([len(s) for s in csamples], np.int64),
         counter_samples=(np.concatenate(csamples) if csamples
@@ -150,13 +170,26 @@ def load_npz(path: str) -> SimTrace:
         st.meta = json.loads(str(z["meta"]))
         tracks = list(z["tracks"])
         cats = list(z["cats"])
-        for ti, ci, name, ts, dur, layer, args in zip(
+        n = len(z["ev_ts"])
+        # eid/deps columns absent in pre-critpath archives: default to
+        # the unrecorded sentinel (-1, no deps)
+        eids = z["ev_eid"] if "ev_eid" in z else np.full(n, -1, np.int64)
+        if "ev_dep_lens" in z:
+            bounds = np.concatenate([[0], np.cumsum(z["ev_dep_lens"])])
+            flat = z["ev_deps"]
+            deps = [flat[bounds[i]:bounds[i + 1]].tolist()
+                    for i in range(n)]
+        else:
+            deps = [[] for _ in range(n)]
+        for i, (ti, ci, name, ts, dur, layer, args) in enumerate(zip(
                 z["ev_track"], z["ev_cat"], z["ev_name"], z["ev_ts"],
-                z["ev_dur"], z["ev_layer"], z["ev_args"]):
+                z["ev_dur"], z["ev_layer"], z["ev_args"])):
             st.events.append(TraceEvent(
                 str(tracks[ti]), str(name), float(ts), float(dur),
                 str(cats[ci]), int(layer),
-                json.loads(args) if args else {}))
+                json.loads(args) if args else {},
+                int(eids[i]), [int(d) for d in deps[i]]))
+        st._next_eid = int(eids.max()) + 1 if n and eids.max() >= 0 else 0
         pos = 0
         for track, n in zip(z["counter_tracks"], z["counter_lens"]):
             chunk = z["counter_samples"][pos:pos + int(n)]

@@ -53,7 +53,17 @@ RESOURCE_CATS = ("wired", "wireless", "dram")
 
 @dataclasses.dataclass
 class TraceEvent:
-    """One transmission served on one resource (begin + duration)."""
+    """One transmission served on one resource (begin + duration).
+
+    ``eid`` is the event's id within its trace (assigned by the
+    recorder, dense from 0); ``deps`` lists the eids of the events
+    whose completion gates this event's begin — the FIFO predecessor
+    on the same server, the channel-global transmission a reuse zone
+    queued behind, or the zone transmissions a global quiesce waited
+    out.  An event with no deps begins at its layer's barrier.  The
+    dependency DAG these edges span is what `repro.obs.critpath`
+    walks to extract the critical path.
+    """
 
     track: str
     name: str
@@ -62,6 +72,12 @@ class TraceEvent:
     cat: str = ""
     layer: int = -1
     args: dict = dataclasses.field(default_factory=dict)
+    eid: int = -1
+    deps: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def end(self) -> float:
+        return self.ts + self.dur
 
 
 class SimTrace:
@@ -74,27 +90,40 @@ class SimTrace:
         self.counters: Dict[str, List[Tuple[float, float]]] = {}
         self.meta: dict = {}
         self._pending: List[TraceEvent] = []
+        self._next_eid = 0
 
     # ------------------------------------------------------------------
     # recording
     # ------------------------------------------------------------------
 
+    def _new_event(self, track, name, ts, dur, cat, layer, deps,
+                   args) -> TraceEvent:
+        ev = TraceEvent(track, name, float(ts), float(dur), cat,
+                        int(layer), args, self._next_eid,
+                        [int(d) for d in deps] if deps else [])
+        self._next_eid += 1
+        return ev
+
     def add(self, track: str, name: str, ts: float, dur: float,
-            cat: str = "", layer: int = -1, **args) -> None:
-        """One absolutely-placed event."""
-        self.events.append(TraceEvent(track, name, float(ts), float(dur),
-                                      cat, int(layer), args))
+            cat: str = "", layer: int = -1, deps=(), **args) -> int:
+        """One absolutely-placed event; returns its eid."""
+        ev = self._new_event(track, name, ts, dur, cat, layer, deps, args)
+        self.events.append(ev)
+        return ev.eid
 
     def add_layer_event(self, track: str, name: str, layer: int,
                         rel_start: float, dur: float, cat: str = "",
-                        **args) -> None:
+                        deps=(), **args) -> int:
         """One event at ``rel_start`` seconds after its layer's start.
 
         Pending until `place_layers` supplies the per-layer maxima that
-        fix the layer starts.
+        fix the layer starts.  Returns the event's eid so emitters can
+        thread it into successors' ``deps``.
         """
-        self._pending.append(TraceEvent(track, name, float(rel_start),
-                                        float(dur), cat, int(layer), args))
+        ev = self._new_event(track, name, rel_start, dur, cat, layer,
+                             deps, args)
+        self._pending.append(ev)
+        return ev.eid
 
     def add_layer_matrix(self, mat: np.ndarray, fmt: str, cat: str,
                          name: str = "span") -> None:
@@ -113,12 +142,20 @@ class SimTrace:
                                                     float(value)))
 
     def place_layers(self, layer_times: np.ndarray) -> None:
-        """Shift pending layer-relative events onto the barrier timeline."""
+        """Shift pending layer-relative events onto the barrier timeline.
+
+        A degenerate call — zero layers, or pending events whose layer
+        index is beyond ``layer_times`` — leaves those events at their
+        relative offsets instead of raising (the empty-structure
+        convention shared with `busy_by_resource` and
+        `repro.obs.metrics.utilization_timeline`).
+        """
         layer_times = np.asarray(layer_times, float)
         starts = np.concatenate([[0.0], np.cumsum(layer_times)[:-1]]) \
-            if layer_times.size else np.zeros(1)
+            if layer_times.size else np.zeros(0)
         for ev in self._pending:
-            ev.ts += float(starts[ev.layer]) if ev.layer >= 0 else 0.0
+            if 0 <= ev.layer < len(starts):
+                ev.ts += float(starts[ev.layer])
             self.events.append(ev)
         self._pending.clear()
         self.meta["layer_starts"] = starts.tolist()
@@ -150,13 +187,17 @@ class SimTrace:
         Aggregates sub-tracks — ``ch0/z1`` and ``ch0/g`` both fold into
         channel 0, ``cut2/l1`` into cut 2 — so the result is directly
         comparable to `EventResult.cut_busy` / ``channel_busy`` /
-        ``dram_busy``.
+        ``dram_busy``.  Tracks that do not parse to an id in
+        ``[0, n)`` are skipped (an empty or foreign trace yields
+        zeros, never an exception).
         """
         out = np.zeros(n)
         for track, busy in self.busy_time(cat).items():
             head = track.split("/", 1)[0]
             if head.startswith(prefix):
-                out[int(head[len(prefix):])] += busy
+                tail = head[len(prefix):]
+                if tail.isdigit() and int(tail) < n:
+                    out[int(tail)] += busy
         return out
 
     def span(self) -> Tuple[float, float]:

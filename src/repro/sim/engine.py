@@ -295,10 +295,26 @@ class PacketSim:
             st.add_counter(f"bytes:{plane}", 0.0, 0.0)
             for t, v in zip(finishes, cum):
                 st.add_counter(f"bytes:{plane}", float(t), float(v))
+        plan = self.net.channels
+        cfg = tr.topo.config
         st.meta.update(policy=policy_name,
                        link_model=self.link_model,
                        dram_model=self.dram_model,
-                       total_time=float(layer_times.sum()))
+                       total_time=float(layer_times.sum()),
+                       # everything `repro.obs.whatif` needs to re-bucket
+                       # recorded transmissions under scaled resources
+                       n_nodes=int(tr.topo.n_nodes),
+                       grid=[int(cfg.grid[0]), int(cfg.grid[1])],
+                       bandwidth=float(self.net.bandwidth),
+                       mac=str(self.net.mac.protocol),
+                       n_channels=int(self.n_channels),
+                       reuse_zones=int(self.n_zones),
+                       channel_policy=str(plan.policy),
+                       n_dram=int(self.n_dram),
+                       link_bw=float(self.link_bw),
+                       cut_of_link=[int(c) for c in self.cut_of_link],
+                       k_par=[int(k) for k in self.k_par],
+                       node_coords=node_grid_coords(tr.topo).tolist())
 
     # ------------------------------------------------------------------
     # batched path: static injection sets, one event pop per layer
@@ -388,17 +404,35 @@ class PacketSim:
         The per-resource busy integral of the reconstruction matches
         `cut_busy`/`channel_busy`/`dram_busy` exactly (pinned to 1e-12
         in tests/test_obs.py).
+
+        Every reconstructed event carries its blocking edges (`deps`):
+        the FIFO predecessor within its (layer, server) queue, and —
+        for a reuse zone's head-of-queue packet — the channel's LAST
+        global transmission (the quiesce it waited out).  Heads of
+        queues with no deps begin at the layer barrier.  Wireless
+        events also carry ``src``/``hops`` args so `repro.obs.whatif`
+        can re-bucket them under a different channel/zone plan.
         """
         tr = self.trace
 
-        def emit(pkt, res, svc, fmt, cat, seg, offset=None):
+        def emit(pkt, res, svc, fmt, cat, seg, offset=None, first_dep=None,
+                 extra=None):
             order = np.argsort(seg, kind="stable")   # FIFO: index order
             ends = segment_cumsum(svc[order], seg[order])
-            for p, r, s, e in zip(pkt[order], res[order], svc[order], ends):
+            sseg = seg[order]
+            prev_eid, prev_seg, last = -1, None, {}
+            for p, r, s, e, sg in zip(pkt[order], res[order], svc[order],
+                                      ends, sseg):
                 off = 0.0 if offset is None else offset(p, r)
-                st.add_layer_event(fmt.format(r), f"p{p}",
-                                   int(tr.layer[p]), off + e - s, float(s),
-                                   cat, bytes=float(tr.nbytes[p]))
+                deps = ([prev_eid] if sg == prev_seg
+                        else (first_dep(sg) if first_dep else []))
+                prev_eid = st.add_layer_event(
+                    fmt.format(r), f"p{p}", int(tr.layer[p]), off + e - s,
+                    float(s), cat, deps=deps, bytes=float(tr.nbytes[p]),
+                    **(extra(p) if extra else {}))
+                prev_seg = sg
+                last[sg] = prev_eid
+            return last
 
         # wired plane
         if self.link_model != "xy":
@@ -418,22 +452,45 @@ class PacketSim:
         if len(idx):
             zc = grp % self.n_zcls
             ch = (grp // self.n_zcls) % self.n_channels
+
+            def wl_extra(p):
+                return {"src": int(tr.src[p]), "hops": int(tr.max_hops[p])}
+
             if self.n_zcls == 1:
                 tracks = np.array([f"ch{c}" for c in ch])
-                offset = None
+                emit(idx, tracks, svc, "{}", "wireless", grp,
+                     extra=wl_extra)
             else:
                 Z = self.n_zones
+                gsel = zc == Z
                 gbusy = np.bincount(
-                    grp[zc == Z] // self.n_zcls, weights=svc[zc == Z],
+                    grp[gsel] // self.n_zcls, weights=svc[gsel],
                     minlength=tr.n_layers * self.n_channels)
-                tracks = np.array([f"ch{c}/g" if z == Z else f"ch{c}/z{z}"
-                                   for c, z in zip(ch, zc)])
-                lay_ch = dict(zip(idx, grp // self.n_zcls))
-                isglob = dict(zip(idx, zc == Z))
+                # global phase first (it quiesces the channel's zones):
+                # FIFO per (layer, channel) from the barrier
+                glast = emit(
+                    idx[gsel],
+                    np.array([f"ch{c}/g" for c in ch[gsel]]),
+                    svc[gsel], "{}", "wireless", grp[gsel], extra=wl_extra)
+                # zone FIFOs run concurrently after the global phase;
+                # each zone queue's head blocks on the channel's last
+                # global transmission
+                zsel = ~gsel
+                lc_of = dict(zip(idx[zsel], grp[zsel] // self.n_zcls))
 
-                def offset(p, _r):
-                    return 0.0 if isglob[p] else float(gbusy[lay_ch[p]])
-            emit(idx, tracks, svc, "{}", "wireless", grp, offset)
+                def z_offset(p, _r):
+                    return float(gbusy[lc_of[p]])
+
+                def z_first_dep(sg):
+                    g_key = (sg // self.n_zcls) * self.n_zcls + Z
+                    return [glast[g_key]] if g_key in glast else []
+
+                emit(idx[zsel],
+                     np.array([f"ch{c}/z{z}"
+                               for c, z in zip(ch[zsel], zc[zsel])]),
+                     svc[zsel], "{}", "wireless", grp[zsel],
+                     offset=z_offset, first_dep=z_first_dep,
+                     extra=wl_extra)
 
         # DRAM ports
         nd = tr.dram_node
@@ -480,15 +537,22 @@ class PacketSim:
             linkmat = pad.copy() if adaptive else None
             ch_srcs = [[set() for _ in range(self.n_zcls)]
                        for _ in range(self.n_channels)]
+            # per-server last-recorded eid (reset at the layer barrier):
+            # the FIFO/quiesce dependency edges of the online path
+            last_w: Dict = {}
+            last_ch: Dict[int, int] = {}
+            last_dram: Dict[int, int] = {}
             for p in pkts:
                 v = tr.nbytes[p]
                 nd = tr.dram_node[p]
                 if nd >= 0:
                     if st is not None:
-                        st.add_layer_event(f"dram{nd}", f"p{p}", li,
-                                           float(dram_pool.free[nd]),
-                                           float(self._dram_svc[p]), "dram",
-                                           bytes=float(v))
+                        last_dram[nd] = st.add_layer_event(
+                            f"dram{nd}", f"p{p}", li,
+                            float(dram_pool.free[nd]),
+                            float(self._dram_svc[p]), "dram",
+                            deps=[last_dram[nd]] if nd in last_dram else [],
+                            bytes=float(v))
                     dram_pool.serve(np.array([nd]),
                                     np.array([self._dram_svc[p]]))
                 # --- wired projection (uncommitted) ---
@@ -543,18 +607,30 @@ class PacketSim:
                     injected[p] = True
                     if zc >= self.n_zones:
                         if st is not None:
-                            st.add_layer_event(f"ch{ch}/g", f"p{p}", li,
-                                               proj_wl - s_wl, s_wl,
-                                               "wireless", bytes=float(v))
+                            # quiesce: waits on every zone server of the
+                            # channel, then owns them all
+                            deps = sorted({last_ch[i] for i in ids_wl
+                                           if i in last_ch})
+                            eid = st.add_layer_event(
+                                f"ch{ch}/g", f"p{p}", li, proj_wl - s_wl,
+                                s_wl, "wireless", deps=deps, bytes=float(v),
+                                src=int(tr.src[p]), hops=int(tr.max_hops[p]))
+                            for i in ids_wl:
+                                last_ch[int(i)] = eid
                         ch_pool.free[ids_wl] = proj_wl
                     else:
                         if st is not None:
                             track = (f"ch{ch}/z{zc}" if self.n_zones > 1
                                      else f"ch{ch}")
-                            st.add_layer_event(track, f"p{p}", li,
-                                               float(ch_pool.free[ids_wl[0]]),
-                                               s_wl, "wireless",
-                                               bytes=float(v))
+                            sid = int(ids_wl[0])
+                            last_ch[sid] = st.add_layer_event(
+                                track, f"p{p}", li,
+                                float(ch_pool.free[ids_wl[0]]),
+                                s_wl, "wireless",
+                                deps=[last_ch[sid]] if sid in last_ch
+                                else [],
+                                bytes=float(v), src=int(tr.src[p]),
+                                hops=int(tr.max_hops[p]))
                         ch_pool.serve(ids_wl, np.array([s_wl]))
                     wl_airtime[ch] += s_wl
                     ch_srcs[ch][zc].add(int(tr.src[p]))
@@ -563,18 +639,24 @@ class PacketSim:
                 elif adaptive:
                     if st is not None:
                         for c, j, begin in slots:
-                            st.add_layer_event(f"cut{c}/l{j}", f"p{p}", li,
-                                               begin, s, "wired",
-                                               bytes=float(v))
+                            last_w[(c, j)] = st.add_layer_event(
+                                f"cut{c}/l{j}", f"p{p}", li, begin, s,
+                                "wired",
+                                deps=[last_w[(c, j)]] if (c, j) in last_w
+                                else [],
+                                bytes=float(v))
                     linkmat = trial
                 elif len(ids):
                     if st is not None:
                         for rid, begin, s1 in zip(
                                 ids, wired_pool.free[ids], svc):
+                            rid = int(rid)
                             track = (f"link{rid}" if xy else f"cut{rid}")
-                            st.add_layer_event(track, f"p{p}", li,
-                                               float(begin), float(s1),
-                                               "wired", bytes=float(v))
+                            last_w[rid] = st.add_layer_event(
+                                track, f"p{p}", li, float(begin), float(s1),
+                                "wired",
+                                deps=[last_w[rid]] if rid in last_w else [],
+                                bytes=float(v))
                     wired_pool.serve(ids, svc)
             # --- layer barrier: drain every queue, roll busy ---
             if adaptive:

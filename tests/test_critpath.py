@@ -1,0 +1,213 @@
+"""Critical-path extraction and trace-driven what-if projection.
+
+Pins the PR's acceptance properties:
+- a hand-built golden dependency DAG on the 2-chiplet/3-packet trace
+  from tests/test_sim.py yields the expected blocking chain, with the
+  FIFO edge recorded and the incremental charges done by hand;
+- the critical-path charges sum to the makespan at rtol=1e-12 on all
+  three link models, with and without channel reuse, on the batched
+  planned path AND the per-packet online path;
+- the what-if projection replayed from the trace is within 10% of an
+  actual re-simulation for +-25% wireless bandwidth on EVERY paper
+  workload (it is exact for ideal-MAC static runs), including channel
+  / reuse-zone re-bucketing in both directions;
+- `whatif_guided` finds the same best design point as the exhaustive
+  `sweep_all` on pinned golden workloads with strictly fewer grid
+  evaluations;
+- degenerate traces follow the repo-wide empty-structure convention,
+  the unsupported striped->xy re-projection raises, and
+  `mark_critical` surfaces the chain as a distinct Perfetto process.
+"""
+
+import pytest
+from test_sim import NET96, _golden_trace
+
+from repro.core import ChannelPlan, NetworkConfig, make_trace, sweep_all
+from repro.core.dse import whatif_guided
+from repro.core.workloads import WORKLOADS
+from repro.obs import (SimTrace, WhatIf, busy_shares, chrome_trace_events,
+                       critical_path, critical_vs_busy, mark_critical,
+                       project, validate)
+from repro.sim import FixedPolicy, PacketSim
+
+REUSE_NET = NetworkConfig(bandwidth=96e9 / 8,
+                          channels=ChannelPlan(n_channels=2, reuse_zones=4))
+
+
+@pytest.fixture(scope="module")
+def traces_all():
+    return {wl: make_trace(wl) for wl in WORKLOADS}
+
+
+# ---------------------------------------------------------------------------
+# golden DAG: the 2-chiplet/3-packet trace, chain built by hand
+# ---------------------------------------------------------------------------
+
+def test_golden_wired_fifo_chain():
+    """Wired baseline: cut 0 serves p0 then p1 FIFO (1 ms each), which
+    is the 2 ms NoP bottleneck — so the critical path is exactly the
+    two-event FIFO chain, each charged its full 1 ms."""
+    sim = PacketSim(_golden_trace(), NET96, record=True)
+    res = sim.run_wired()
+    cp = critical_path(res.trace)
+
+    assert cp.makespan == pytest.approx(2e-3)
+    assert [(s.track, s.name) for s in cp.segments] == [("cut0", "p0"),
+                                                        ("cut0", "p1")]
+    assert [s.crit_dur for s in cp.segments] == [pytest.approx(1e-3)] * 2
+    # the FIFO edge itself is recorded: p1 depends on p0, p0 on nothing
+    p0, p1 = cp.segments
+    by_eid = {ev.eid: ev for ev in res.trace.events}
+    assert by_eid[p1.eid].deps == [p0.eid]
+    assert by_eid[p0.eid].deps == []
+    assert cp.by_resource() == {"cut0": pytest.approx(2e-3)}
+    assert cp.critical_shares() == {"wired": pytest.approx(1.0)}
+
+
+def test_golden_fixed_injection_single_segment():
+    """Offloading p1 leaves cut 0 with one 1 ms packet, tying the 1 ms
+    compute floor: the chain collapses to a single full-span segment."""
+    sim = PacketSim(_golden_trace(), NET96, record=True)
+    res = sim.run(FixedPolicy([False, True, False]))
+    cp = critical_path(res.trace)
+    assert cp.makespan == pytest.approx(1e-3)
+    assert len(cp.segments) == 1
+    assert cp.segments[0].crit_dur == pytest.approx(1e-3)
+
+
+def test_golden_online_greedy_compute_floor():
+    """Greedy offloads both multicasts; the 1 ms compute floor binds
+    and the path is the single coarse compute span."""
+    sim = PacketSim(_golden_trace(), NET96, record=True)
+    res = sim.run("greedy")
+    cp = critical_path(res.trace)
+    assert cp.makespan == pytest.approx(1e-3)
+    assert [(s.track, s.plane) for s in cp.segments] == [("compute",
+                                                          "compute")]
+
+
+# ---------------------------------------------------------------------------
+# invariant: charges telescope to the makespan, rtol 1e-12
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("link_model", ["striped", "adaptive", "xy"])
+@pytest.mark.parametrize("net", [NET96, REUSE_NET],
+                         ids=["1ch", "2ch-reuse"])
+def test_critpath_sum_equals_makespan(traces_all, link_model, net):
+    for wl in ("zfnet", "transformer"):
+        sim = PacketSim(traces_all[wl], net, record=True,
+                        link_model=link_model)
+        res = sim.run("static")
+        cp = critical_path(res.trace)
+        assert cp.makespan == pytest.approx(res.total_time, rel=1e-12)
+        assert cp.total == pytest.approx(cp.makespan, rel=1e-12), \
+            (wl, link_model)
+
+
+def test_critpath_sum_online_path(traces_all):
+    """The per-packet online recorder threads the same dep structure."""
+    for policy in ("greedy", "adaptive"):
+        sim = PacketSim(traces_all["zfnet"], REUSE_NET, record=True)
+        res = sim.run(policy)
+        cp = critical_path(res.trace)
+        assert cp.total == pytest.approx(res.total_time, rel=1e-12)
+
+
+def test_critical_vs_busy_is_a_distribution(traces_all):
+    sim = PacketSim(traces_all["resnet50"], NET96, record=True)
+    cvb = critical_vs_busy(sim.run("static").trace)
+    for key in ("critical", "busy"):
+        assert sum(cvb[key].values()) == pytest.approx(1.0)
+    assert 0.0 <= cvb["divergence"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# what-if projection vs actual re-simulation
+# ---------------------------------------------------------------------------
+
+def test_projection_within_10pct_on_every_workload(traces_all):
+    """+-25% wireless bandwidth, projected from ONE recorded run,
+    matches a from-scratch re-simulation on all paper workloads."""
+    for wl, tr in traces_all.items():
+        for scale in (0.75, 1.25):
+            v = validate(tr, NET96, WhatIf(wireless_scale=scale))
+            assert v["error"] <= 0.10, (wl, scale, v)
+
+
+def test_projection_rebuckets_channels_and_zones():
+    tr = make_trace("resnet50")
+    # single channel -> 2ch x 4 reuse zones, and the reverse direction
+    v_up = validate(tr, NET96, WhatIf(n_channels=2, reuse_zones=4))
+    assert v_up["error"] <= 0.10
+    v_dn = validate(tr, REUSE_NET, WhatIf(n_channels=1, reuse_zones=1))
+    assert v_dn["error"] <= 0.10
+
+
+def test_projection_speedup_sign():
+    """Doubling wireless bandwidth never slows a run; halving never
+    speeds one up (the wireless term is monotone in bandwidth)."""
+    sim = PacketSim(make_trace("gnmt"), NET96, record=True)
+    st = sim.run("static").trace
+    assert project(st, WhatIf(wireless_scale=2.0)).speedup >= 1 - 1e-12
+    assert project(st, WhatIf(wireless_scale=0.5)).speedup <= 1 + 1e-12
+
+
+def test_striped_to_xy_projection_raises():
+    sim = PacketSim(make_trace("zfnet"), NET96, record=True)
+    st = sim.run("static").trace
+    with pytest.raises(ValueError, match="striping"):
+        project(st, WhatIf(link_model="xy"))
+
+
+# ---------------------------------------------------------------------------
+# whatif-guided DSE pruning
+# ---------------------------------------------------------------------------
+
+def test_whatif_guided_matches_exhaustive(traces_all):
+    golden = {wl: traces_all[wl] for wl in ("zfnet", "resnet50", "gnmt")}
+    guided = whatif_guided(golden)
+    exhaustive = sweep_all(golden)
+    assert guided.points_evaluated < guided.points_exhaustive
+    best = {(r.workload, r.bandwidth_gbps):
+            (r.best_threshold, r.best_injection, r.best_speedup)
+            for r in exhaustive}
+    for r in guided.results:
+        bt, bi, bs = best[(r.workload, r.bandwidth_gbps)]
+        assert (r.best_threshold, r.best_injection) == (bt, bi), \
+            (r.workload, r.bandwidth_gbps)
+        assert r.best_speedup == pytest.approx(bs, rel=1e-12)
+    # the projected incumbents exist for every pruned band
+    assert guided.projected_best
+    assert guided.provenance is not None
+
+
+# ---------------------------------------------------------------------------
+# degenerate traces, marking, export
+# ---------------------------------------------------------------------------
+
+def test_empty_trace_conventions():
+    st = SimTrace(label="empty")
+    cp = critical_path(st)
+    assert cp.segments == [] and cp.makespan == 0.0
+    assert cp.critical_shares() == {}
+    assert busy_shares(st) == {}
+    cvb = critical_vs_busy(st)
+    assert cvb["divergence"] == 0.0
+    proj = project(st, WhatIf(wireless_scale=2.0))
+    assert proj.total_time == 0.0 and proj.speedup == 1.0
+
+
+def test_mark_critical_exports_distinct_track():
+    sim = PacketSim(make_trace("zfnet"), REUSE_NET, record=True)
+    st = sim.run("static").trace
+    cp = mark_critical(st)
+    events = chrome_trace_events(st)["traceEvents"]
+    mirrors = [e for e in events if e.get("cat") == "critpath"]
+    # every per-packet critical segment is mirrored onto the lane
+    assert len(mirrors) == sum(1 for ev in st.events
+                               if ev.args.get("critical"))
+    assert len(mirrors) >= len([s for s in cp.segments if s.eid >= 0]) > 0
+    crit_pids = {e["pid"] for e in mirrors}
+    other_pids = {e["pid"] for e in events
+                  if e.get("ph") == "X" and e.get("cat") != "critpath"}
+    assert len(crit_pids) == 1 and not (crit_pids & other_pids)

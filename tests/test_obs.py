@@ -407,3 +407,155 @@ def test_bench_check_end_to_end(tmp_path, capsys):
     assert run_mod.main(["--check", "--only", "mapping_sensitivity",
                          "--file", str(path)]) == 1
     capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# multi-trace merge: colliding names stay separate, counters ordered
+# ---------------------------------------------------------------------------
+
+def _tiny_trace(label, dur):
+    st = SimTrace(label=label)
+    st.add("cut0", "p0", 0.0, dur, "wired", layer=0)
+    st.add("compute", "span", 0.0, dur, "compute", layer=0)
+    st.add_counter("queue/cut0", 0.0, 1.0)
+    st.add_counter("queue/cut0", dur, 0.0)
+    return st
+
+
+def test_merge_keeps_colliding_tracks_separate():
+    """Two traces both with a 'cut0' wired track and a 'queue/cut0'
+    counter merge into disjoint per-trace process groups."""
+    from repro.obs.export import _PID_STRIDE
+    obj = chrome_trace_events({"a": _tiny_trace("a", 1e-3),
+                               "b": _tiny_trace("b", 2e-3)})
+    evs = obj["traceEvents"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    a_pids = {e["pid"] for e in xs if e["pid"] < _PID_STRIDE}
+    b_pids = {e["pid"] for e in xs if e["pid"] >= _PID_STRIDE}
+    assert a_pids and b_pids and not (a_pids & b_pids)
+    # identical plane -> same pid offset, one stride apart
+    assert {p + _PID_STRIDE for p in a_pids} == b_pids
+    # process names carry the trace label, so collisions are readable
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"a: wired", "b: wired", "a: counters", "b: counters"} <= names
+    # both 'cut0' threads exist, each under its own trace's pid
+    threads = [(e["pid"], e["args"]["name"]) for e in evs
+               if e["ph"] == "M" and e["name"] == "thread_name"]
+    assert len([t for t in threads if t[1] == "cut0"]) == 2
+
+
+def test_merge_counter_tracks_sorted_and_sample_ordered():
+    st = SimTrace(label="c")
+    st.add("cut0", "p0", 0.0, 1e-3, "wired", layer=0)
+    for tr in ("z/depth", "a/depth", "m/depth"):
+        st.add_counter(tr, 0.0, 1.0)
+        st.add_counter(tr, 1e-3, 0.0)
+    evs = chrome_trace_events(st)["traceEvents"]
+    cs = [e for e in evs if e["ph"] == "C"]
+    # counter tracks are emitted in sorted order...
+    firsts = [e["name"] for e in cs if e["ts"] == 0.0]
+    assert firsts == sorted(firsts)
+    # ...and each track's samples keep their time order
+    by_name = {}
+    for e in cs:
+        by_name.setdefault(e["name"], []).append(e["ts"])
+    for name, ts in by_name.items():
+        assert ts == sorted(ts), name
+    # counters never share a pid with X events
+    assert not ({e["pid"] for e in cs}
+                & {e["pid"] for e in evs if e["ph"] == "X"})
+
+
+def test_npz_string_labels_round_trip(tmp_path):
+    """Track/cat/name/label strings (incl. non-ASCII and separator
+    characters) come back as real Python str, not numpy scalars."""
+    st = SimTrace(label="unicode-λ:trace")
+    st.add("ch0/z3", "p1,αβ", 0.0, 1e-3, "wireless", layer=0, note="x;y")
+    st.add("dram(pooled)", "span", 0.0, 2e-3, "an:dram-agg", layer=0)
+    st.add_counter("util/ch0 λ", 0.0, 0.5)
+    path = tmp_path / "t.npz"
+    export_npz(st, str(path))
+    back = load_npz(str(path))
+    assert back.label == "unicode-λ:trace"
+    assert [(type(e.track), type(e.name), type(e.cat))
+            for e in back.events] == [(str, str, str)] * 2
+    assert back.__dict__ == st.__dict__
+    assert list(back.counters) == ["util/ch0 λ"]
+
+
+# ---------------------------------------------------------------------------
+# seed-era prints routed through MetricsLogger (PR satellite)
+# ---------------------------------------------------------------------------
+
+def test_no_bare_prints_in_src():
+    """Everything under src/repro reports via obs.metrics; the logger
+    itself is the one allowed `print(` call site."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+    offenders = [
+        str(p.relative_to(root))
+        for p in sorted(root.rglob("*.py"))
+        if p.name != "metrics.py"
+        for line in p.read_text().splitlines()
+        if "print(" in line.split("#")[0]
+    ]
+    assert offenders == []
+
+
+# ---------------------------------------------------------------------------
+# bench history ledger (benchmarks/run.py + benchmarks/history.py)
+# ---------------------------------------------------------------------------
+
+def test_history_append_load_latest(tmp_path):
+    results = str(tmp_path / "bench.json")
+    hist = run_mod.history_path(results)
+    meta = {"row": {"us_per_call": 1.0, "derived": "m=1.00",
+                    "hash": "x", "ts": "t"}}
+    run_mod.append_history(hist, meta)
+    run_mod.append_history(hist, {"row": {"us_per_call": 2.0,
+                                          "derived": "m=2.00",
+                                          "hash": "y", "ts": "t2"}})
+    with open(hist, "a") as f:
+        f.write("{torn json line\n")      # crash-truncated entry
+    entries = run_mod.load_history(hist)
+    assert len(entries) == 2              # torn line skipped
+    assert all(e["metrics"] == {"m": e["us_per_call"]} for e in entries)
+    latest = run_mod.latest_by_row(entries)
+    assert latest["row"]["derived"] == "m=2.00"
+
+
+def test_check_falls_back_to_history(tmp_path, capsys):
+    """--check on a results file with no _bench_meta uses the latest
+    history entry per row instead of returning 'nothing to check'."""
+    results = tmp_path / "bench.json"
+    assert run_mod.main(["--only", "mapping_sensitivity",
+                         "--file", str(results)]) == 0
+    hist = run_mod.history_path(str(results))
+    assert len(run_mod.load_history(hist)) == 1
+    data = json.loads(results.read_text())
+    del data[run_mod.META_KEY]            # simulate a pre-meta commit
+    results.write_text(json.dumps(data))
+    assert run_mod.main(["--check", "--only", "mapping_sensitivity",
+                         "--file", str(results)]) == 0
+    assert "falling back" in capsys.readouterr().err
+    # with neither meta nor history there is genuinely nothing to check
+    import os
+    os.unlink(hist)
+    assert run_mod.main(["--check", "--only", "mapping_sensitivity",
+                         "--file", str(results)]) == 2
+
+
+def test_history_plot_text(tmp_path, capsys):
+    import benchmarks.history as hist_mod
+    path = str(tmp_path / "h.jsonl")
+    for v in (1.0, 3.0, 2.0):
+        run_mod.append_history(path, {"r": {"us_per_call": v,
+                                            "derived": "m=%.2f" % v,
+                                            "hash": "h", "ts": "t"}})
+    assert hist_mod.main(["--plot-text", "--file", path]) == 0
+    out = capsys.readouterr().out
+    assert "r.m" in out and "1 -> 2" in out
+    assert any(b in out for b in hist_mod.BARS)
+    assert hist_mod.main(["--plot-text", "--file",
+                          str(tmp_path / "none.jsonl")]) == 1
