@@ -24,6 +24,7 @@ from typing import Dict, Tuple
 
 from repro.core.simulator import PJ_PER_BIT_NOC, PJ_PER_MAC
 from repro.core.topology import AcceleratorConfig
+from repro.units import TERA
 from repro.core.traffic import WEIGHT_SRAM_BYTES
 
 _DEFAULT = AcceleratorConfig()
@@ -43,7 +44,7 @@ class ChipletSpec:
     pj_per_bit_noc: float       # on-chip transport energy coefficient
 
     def describe(self) -> str:
-        return (f"{self.name}({self.tops / 1e12:.0f}T,"
+        return (f"{self.name}({self.tops / TERA:.0f}T,"
                 f"{self.sram_bytes / 2**20:.0f}MiB)")
 
 

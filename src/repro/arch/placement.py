@@ -35,7 +35,6 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -49,6 +48,7 @@ from repro.core.topology import AcceleratorConfig
 from repro.core.traffic import PACKET_BYTES, build_trace
 from repro.core.workloads import Layer, get_workload
 from repro.net.config import NetworkConfig
+from repro.units import gbps_to_bytes_per_s
 
 from .catalog import ChipletSpec, get_mix, get_spec
 from .package import HeteroPackage
@@ -114,7 +114,7 @@ class PlacementProblem:
         if len(self.specs) != self.n_slots:
             raise ValueError(f"mix has {len(self.specs)} specs for a "
                              f"{self.n_slots}-slot {grid} grid")
-        self.net = net or NetworkConfig(bandwidth=96e9 / 8)
+        self.net = net or NetworkConfig(bandwidth=gbps_to_bytes_per_s(96))
         self.base = base
         self.packet_bytes = packet_bytes or PACKET_BYTES
         self.snake = snake_order(
@@ -336,8 +336,22 @@ def anneal(problem: PlacementProblem, objective: str = "hybrid",
     joint states.  Deterministic for a fixed seed — the RNG stream is
     the only source of randomness.
     """
-    t0 = time.perf_counter()
     evals0 = problem.evaluations
+    with DEFAULT_REGISTRY.span("arch.anneal", objective=objective) as t:
+        best = _anneal_search(problem, objective, seed, steps, restarts,
+                              t_start, t_end)
+    prov = make_provenance(
+        "arch.anneal",
+        problem.provenance_config(objective, steps=steps,
+                                  restarts=restarts),
+        seed=seed, points=problem.evaluations - evals0,
+        wall_s=t["seconds"])
+    return problem.result(best, objective, "anneal", provenance=prov)
+
+
+def _anneal_search(problem: PlacementProblem, objective: str, seed: int,
+                   steps: int, restarts: int, t_start: float,
+                   t_end: float) -> PlacementState:
     rng = np.random.default_rng(seed)
     best = greedy_seed(problem)
     best_cost = problem.cost(best, objective)
@@ -365,16 +379,7 @@ def anneal(problem: PlacementProblem, objective: str = "hybrid",
                 if cur_cost < best_cost:
                     best, best_cost = cur, cur_cost
             temp *= decay
-    best = _polish(problem, best, objective)
-    wall = time.perf_counter() - t0
-    DEFAULT_REGISTRY.histogram("arch.anneal",
-                               objective=objective).observe(wall)
-    prov = make_provenance(
-        "arch.anneal",
-        problem.provenance_config(objective, steps=steps,
-                                  restarts=restarts),
-        seed=seed, points=problem.evaluations - evals0, wall_s=wall)
-    return problem.result(best, objective, "anneal", provenance=prov)
+    return _polish(problem, best, objective)
 
 
 def exhaustive(problem: PlacementProblem, objective: str = "hybrid",
@@ -385,8 +390,20 @@ def exhaustive(problem: PlacementProblem, objective: str = "hybrid",
     if n > 6:
         raise ValueError("exhaustive enumeration is for <= 6-slot "
                          f"packages (got {n}); use anneal()")
-    t0 = time.perf_counter()
     evals0 = problem.evaluations
+    with DEFAULT_REGISTRY.span("arch.exhaustive",
+                               objective=objective) as t:
+        best = _exhaustive_search(problem, objective, max_evals)
+    prov = make_provenance(
+        "arch.exhaustive", problem.provenance_config(objective),
+        points=problem.evaluations - evals0, wall_s=t["seconds"])
+    return problem.result(best, objective, "exhaustive", provenance=prov)
+
+
+def _exhaustive_search(problem: PlacementProblem, objective: str,
+                       max_evals: int) -> PlacementState:
+    n, L = problem.n_slots, len(problem.layers)
+    ns = problem.n_stages
     seen, orders = set(), []
     for perm in itertools.permutations(range(n)):
         key = tuple(problem.specs[k].name for k in perm)
@@ -407,13 +424,7 @@ def exhaustive(problem: PlacementProblem, objective: str = "hybrid",
             c = problem.cost(state, objective)
             if c < best_cost:
                 best, best_cost = state, c
-    wall = time.perf_counter() - t0
-    DEFAULT_REGISTRY.histogram("arch.exhaustive",
-                               objective=objective).observe(wall)
-    prov = make_provenance(
-        "arch.exhaustive", problem.provenance_config(objective),
-        points=problem.evaluations - evals0, wall_s=wall)
-    return problem.result(best, objective, "exhaustive", provenance=prov)
+    return best
 
 
 # ----------------------------------------------------------------------
@@ -479,22 +490,22 @@ def codesign(workload: str | List[Layer], mix: str = "big_little",
     evaluated under BOTH planes, so the wired and hybrid spreads are
     measured over the same placements.
     """
-    t0 = time.perf_counter()
     problem = PlacementProblem(workload, mix, grid, net, base)
-    wired = anneal(problem, "wired", seed=seed, steps=steps,
-                   restarts=restarts)
-    hybrid = anneal(problem, "hybrid", seed=seed, steps=steps,
-                    restarts=restarts)
-    cross_h = _polish(problem, wired.state, "hybrid")
-    if problem.cost(cross_h, "hybrid") < hybrid.makespan:
-        hybrid = problem.result(cross_h, "hybrid", "anneal+cross")
-    cross_w = _polish(problem, hybrid.state, "wired")
-    if problem.cost(cross_w, "wired") < wired.makespan:
-        wired = problem.result(cross_w, "wired", "anneal+cross")
-    pool = [greedy_seed(problem), wired.state, hybrid.state]
-    pool += placement_pool(problem, seed + 1, n_samples)
-    evals = np.array([problem.evaluate(s) for s in pool])
-    t_w, t_h = evals[:, 0], evals[:, 1]
+    with DEFAULT_REGISTRY.span("arch.codesign", mix=mix) as t:
+        wired = anneal(problem, "wired", seed=seed, steps=steps,
+                       restarts=restarts)
+        hybrid = anneal(problem, "hybrid", seed=seed, steps=steps,
+                        restarts=restarts)
+        cross_h = _polish(problem, wired.state, "hybrid")
+        if problem.cost(cross_h, "hybrid") < hybrid.makespan:
+            hybrid = problem.result(cross_h, "hybrid", "anneal+cross")
+        cross_w = _polish(problem, hybrid.state, "wired")
+        if problem.cost(cross_w, "wired") < wired.makespan:
+            wired = problem.result(cross_w, "wired", "anneal+cross")
+        pool = [greedy_seed(problem), wired.state, hybrid.state]
+        pool += placement_pool(problem, seed + 1, n_samples)
+        evals = np.array([problem.evaluate(s) for s in pool])
+        t_w, t_h = evals[:, 0], evals[:, 1]
     return CodesignResult(
         workload=problem.workload, mix=problem.mix,
         package=problem.package(hybrid.state.order).describe(),
@@ -511,4 +522,4 @@ def codesign(workload: str | List[Layer], mix: str = "big_little",
                                       restarts=restarts,
                                       n_samples=n_samples),
             seed=seed, points=problem.evaluations,
-            wall_s=time.perf_counter() - t0))
+            wall_s=t["seconds"]))

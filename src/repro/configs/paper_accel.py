@@ -1,6 +1,7 @@
 """The paper's own platform config (Table 1), for the package-scale sim."""
 
 from repro.core.topology import AcceleratorConfig
+from repro.units import gbps_to_bytes_per_s
 
-CONFIG_64G = AcceleratorConfig(wireless_bw=64e9 / 8)
-CONFIG_96G = AcceleratorConfig(wireless_bw=96e9 / 8)
+CONFIG_64G = AcceleratorConfig(wireless_bw=gbps_to_bytes_per_s(64))
+CONFIG_96G = AcceleratorConfig(wireless_bw=gbps_to_bytes_per_s(96))

@@ -15,7 +15,6 @@ idealized speedup survives a real MAC.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -32,6 +31,7 @@ from repro.obs.provenance import make_provenance
 from .simulator import (TrafficTrace, make_trace, simulate_hybrid,
                         simulate_wired)
 from .topology import AcceleratorConfig, node_grid_coords
+from .units import bytes_per_s_to_gbps, gbps_to_bytes_per_s
 from .wireless import eligibility, injection_hash
 
 # the paper's sweep axes (shared with GridSpec's defaults)
@@ -68,14 +68,16 @@ def _result_from_grid(workload: str, bandwidth_gbps: int,
 
 
 def sweep(trace: TrafficTrace, workload: str, bandwidth_gbps: int,
-          mac: MacConfig = MacConfig("ideal"),
-          channels: ChannelPlan = ChannelPlan(1)) -> SweepResult:
+          mac: MacConfig | None = None,
+          channels: ChannelPlan | None = None) -> SweepResult:
     """Per-point (threshold x injection) sweep via `simulate_hybrid`."""
+    mac = mac if mac is not None else MacConfig("ideal")
+    channels = channels if channels is not None else ChannelPlan(1)
     base = simulate_wired(trace).total_time
     grid = np.zeros((len(THRESHOLDS), len(INJECTIONS)))
     for ti, thr in enumerate(THRESHOLDS):
         for pi, p in enumerate(INJECTIONS):
-            cfg = NetworkConfig(bandwidth=bandwidth_gbps * 1e9 / 8,
+            cfg = NetworkConfig(bandwidth=gbps_to_bytes_per_s(bandwidth_gbps),
                                 distance_threshold=thr, injection_prob=p,
                                 channels=channels, mac=mac)
             grid[ti, pi] = base / simulate_hybrid(trace, cfg).total_time
@@ -231,7 +233,7 @@ def whatif_guided(traces: Dict[str, TrafficTrace],
             results.append(r_hi)
             if not lows:
                 continue
-            net = NetworkConfig(bandwidth=hi * 1e9 / 8,
+            net = NetworkConfig(bandwidth=gbps_to_bytes_per_s(hi),
                                 distance_threshold=r_hi.best_threshold,
                                 injection_prob=r_hi.best_injection)
             sim = PacketSim(trace, net, record=True)
@@ -354,7 +356,7 @@ def grid_anchor(trace: TrafficTrace,
     different grids.  The exact bandwidth is threaded through
     (`GridSpec` accepts fractional Gb/s); rounding to integer Gb/s here
     used to anchor non-integer networks against the wrong grid."""
-    spec = GridSpec(bandwidths_gbps=(net.bandwidth * 8 / 1e9,),
+    spec = GridSpec(bandwidths_gbps=(bytes_per_s_to_gbps(net.bandwidth),),
                     macs=(net.mac,), plans=(net.channels,))
     res = batched_design_space(trace).evaluate(spec)
     _, _, _, ti, ii = np.unravel_index(int(res.speedup.argmax()),
@@ -379,7 +381,7 @@ def policy_sweep(trace: TrafficTrace, workload: str,
     for the event engine's default striped/ideal configuration).
     """
     from repro.sim import PacketSim    # late import: core re-exports sim
-    net = net or NetworkConfig(bandwidth=96e9 / 8)
+    net = net or NetworkConfig(bandwidth=gbps_to_bytes_per_s(96))
     grid_best = grid_best_speedup(trace, net)
     sim = PacketSim(trace, net)
     base = sim.run_wired().total_time
@@ -509,7 +511,23 @@ def scaling_sweep(workloads=None, grids=SCALING_GRIDS,
         workloads = list(WORKLOADS)
     out = []
     points = 0
-    t0 = time.perf_counter()
+    with DEFAULT_REGISTRY.span("dse.scaling_sweep", engine=engine) as t:
+        out, points = _scaling_sweep_body(grids, workloads, bandwidth_gbps,
+                                          engine)
+    wall = t["seconds"]
+    prov = make_provenance(
+        "dse.scaling_sweep",
+        {"workloads": list(workloads), "grids": [tuple(g) for g in grids],
+         "bandwidth_gbps": bandwidth_gbps, "engine": engine},
+        points=points, wall_s=wall)
+    for r in out:
+        r.provenance = prov
+    return out
+
+
+def _scaling_sweep_body(grids, workloads, bandwidth_gbps, engine):
+    out: List[ScalingResult] = []
+    points = 0
     for grid in grids:
         acc = scaled_config(tuple(grid))
         plans = (ChannelPlan(1),) + reuse_plans(tuple(grid))
@@ -530,7 +548,7 @@ def scaling_sweep(workloads=None, grids=SCALING_GRIDS,
                     for ti, thr in enumerate(spec.thresholds):
                         for ii, p in enumerate(spec.injections):
                             cfg = NetworkConfig(
-                                bandwidth=bandwidth_gbps * 1e9 / 8,
+                                bandwidth=gbps_to_bytes_per_s(bandwidth_gbps),
                                 distance_threshold=thr, injection_prob=p,
                                 channels=plan)
                             sp[pi, ti, ii] = base / simulate_hybrid(
@@ -549,17 +567,7 @@ def scaling_sweep(workloads=None, grids=SCALING_GRIDS,
                 wired_time=base,
                 best_single=best_single, best_reuse=best_reuse,
                 best_reuse_plan=plan_desc))
-    wall = time.perf_counter() - t0
-    DEFAULT_REGISTRY.histogram("dse.scaling_sweep",
-                               engine=engine).observe(wall)
-    prov = make_provenance(
-        "dse.scaling_sweep",
-        {"workloads": list(workloads), "grids": [tuple(g) for g in grids],
-         "bandwidth_gbps": bandwidth_gbps, "engine": engine},
-        points=points, wall_s=wall)
-    for r in out:
-        r.provenance = prov
-    return out
+    return out, points
 
 
 def scaling_summary(results: List[ScalingResult]

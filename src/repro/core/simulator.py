@@ -28,6 +28,7 @@ from repro.obs.trace import active_recorder
 from .mapper import pipeline_mapping, spatial_mapping
 from .topology import AcceleratorConfig, build_topology, node_grid_coords
 from .traffic import TrafficTrace, build_trace
+from .units import BITS_PER_BYTE, pj_to_j
 from .wireless import WirelessConfig, select_wireless, wireless_energy_joules
 from .workloads import get_workload
 
@@ -143,21 +144,23 @@ def noc_energy_pj(trace: TrafficTrace) -> float:
     `mac_energy_pj`; coefficients from `chiplet_pj_per_bit_noc`)."""
     pj = trace.topo.config.chiplet_pj_per_bit_noc
     if pj is None or trace.noc_bytes_per_chiplet is None:
-        return trace.noc_bytes * 8 * PJ_PER_BIT_NOC
+        return trace.noc_bytes * BITS_PER_BYTE * PJ_PER_BIT_NOC
     v = np.asarray(pj, float)
     if np.all(v == v[0]):
-        return trace.noc_bytes * 8 * float(v[0])
-    return float(trace.noc_bytes_per_chiplet @ v) * 8
+        return trace.noc_bytes * BITS_PER_BYTE * float(v[0])
+    return float(trace.noc_bytes_per_chiplet @ v) * BITS_PER_BYTE
 
 
 def energy_joules(trace: TrafficTrace, link_loads: np.ndarray,
                   wireless_bytes: float = 0.0) -> float:
     """Platform energy per inference: compute + DRAM + NoC + NoP + WL."""
-    e = mac_energy_pj(trace) * 1e-12
-    e += float(trace.dram_bytes.sum()) * 8 * PJ_PER_BIT_DRAM * 1e-12
-    e += noc_energy_pj(trace) * 1e-12
-    e += float(link_loads.sum()) * 8 * PJ_PER_BIT_NOP_HOP * 1e-12
-    e += wireless_bytes * 8 * PJ_PER_BIT_WIRELESS * 1e-12
+    e = pj_to_j(mac_energy_pj(trace))
+    e += pj_to_j(float(trace.dram_bytes.sum()) * BITS_PER_BYTE
+                 * PJ_PER_BIT_DRAM)
+    e += pj_to_j(noc_energy_pj(trace))
+    e += pj_to_j(float(link_loads.sum()) * BITS_PER_BYTE
+                 * PJ_PER_BIT_NOP_HOP)
+    e += pj_to_j(wireless_bytes * BITS_PER_BYTE * PJ_PER_BIT_WIRELESS)
     return e
 
 

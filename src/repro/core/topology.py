@@ -22,6 +22,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from .units import gbps_to_bytes_per_s
+
 Coord = Tuple[int, int]
 
 
@@ -39,9 +41,9 @@ class AcceleratorConfig:
     n_dram: int = 4                          # DRAM chiplets on the perimeter
     tops_total: float = 144e12               # 144 TOPS across the package
     dram_bw_per_chiplet: float = 16e9        # 16 GB/s per DRAM chiplet
-    nop_bw_per_side: float = 32e9 / 8        # 32 Gb/s per mesh side -> B/s
-    noc_bw_per_port: float = 64e9 / 8        # 64 Gb/s per NoC port -> B/s
-    wireless_bw: float = 64e9 / 8            # 64 or 96 Gb/s -> B/s
+    nop_bw_per_side: float = gbps_to_bytes_per_s(32)   # per mesh side
+    noc_bw_per_port: float = gbps_to_bytes_per_s(64)   # per NoC port
+    wireless_bw: float = gbps_to_bytes_per_s(64)       # paper: 64 or 96
     pe_mesh: Tuple[int, int] = (16, 16)      # PEs per chiplet (NoC nodes)
     chiplet_mm: float = 5.0                  # chiplet edge length (layout only)
     freq_ghz: float = 1.0

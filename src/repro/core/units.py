@@ -1,0 +1,13 @@
+"""`repro.core.units`: the unit-constants module, core-plane spelling.
+
+The implementation lives at `repro.units` (the `repro` namespace root)
+because `repro.net` needs the constants at import time and
+`repro.core.__init__` eagerly imports `repro.net` — a
+`repro.net -> repro.core.units -> repro.core.__init__ -> repro.net`
+import would deadlock on partially-initialised modules whenever
+`repro.net` is imported first.  Core-plane modules import from here
+(``from .units import ...``); everything is the same object either way.
+"""
+
+from repro.units import *            # noqa: F401,F403  (re-export)
+from repro.units import __all__      # noqa: F401

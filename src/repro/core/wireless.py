@@ -25,16 +25,31 @@ import dataclasses
 import numpy as np
 
 from .traffic import TrafficTrace
+from .units import bytes_to_bits, gbps_to_bytes_per_s, pj_to_j
 
 _PHI = 0.6180339887498949  # frac(golden ratio)
 
 
 @dataclasses.dataclass(frozen=True)
 class WirelessConfig:
-    bandwidth: float = 64e9 / 8      # B/s (64 Gb/s default; paper: 64/96)
+    bandwidth: float = gbps_to_bytes_per_s(64)   # B/s (paper: 64/96 Gb/s)
     distance_threshold: int = 1      # NoP hops (paper sweep: 1..4)
     injection_prob: float = 0.5      # paper sweep: 0.10..0.80 step 0.05
     energy_pj_per_bit: float = 1.0   # ~1 pJ/bit mm-wave transceivers
+
+    def __post_init__(self):
+        if not self.bandwidth > 0:
+            raise ValueError(f"bandwidth must be positive bytes/s, got "
+                             f"{self.bandwidth!r}")
+        if not 0.0 <= self.injection_prob <= 1.0:
+            raise ValueError(f"injection_prob must be in [0, 1], got "
+                             f"{self.injection_prob!r}")
+        if self.distance_threshold < 0:
+            raise ValueError(f"distance_threshold must be >= 0 hops, "
+                             f"got {self.distance_threshold!r}")
+        if self.energy_pj_per_bit < 0:
+            raise ValueError(f"energy_pj_per_bit must be >= 0, got "
+                             f"{self.energy_pj_per_bit!r}")
 
 
 def eligibility(trace: TrafficTrace, threshold: int) -> np.ndarray:
@@ -75,5 +90,5 @@ def select_wireless(trace: TrafficTrace, cfg) -> np.ndarray:
 def wireless_energy_joules(trace: TrafficTrace, injected: np.ndarray,
                            cfg, extra_bytes: float = 0.0) -> float:
     """Transceiver energy for the injected payload (+ MAC overhead bytes)."""
-    bits = (float(trace.nbytes[injected].sum()) + extra_bytes) * 8.0
-    return bits * cfg.energy_pj_per_bit * 1e-12
+    bits = bytes_to_bits(float(trace.nbytes[injected].sum()) + extra_bytes)
+    return pj_to_j(bits * cfg.energy_pj_per_bit)

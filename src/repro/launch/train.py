@@ -26,6 +26,7 @@ from repro.data.pipeline import DataConfig, batch_for_model
 from repro.launch.mesh import (make_host_mesh, make_production_mesh,
                                    use_mesh)
 from repro.obs.metrics import get_logger
+from repro.units import MEGA
 from repro.optim.optimizers import OptimizerConfig
 from repro.runtime.compression import CompressionConfig
 from repro.runtime.fault_tolerance import StragglerMitigator
@@ -75,9 +76,9 @@ def main():
     mesh = (make_host_mesh() if args.mesh == "host"
             else make_production_mesh(multi_pod=args.mesh == "multipod"))
     log.info(f"arch={cfg.name} reduced={args.reduced} "
-             f"params~{cfg.param_count()/1e6:.1f}M opt={opt_name} "
+             f"params~{cfg.param_count() / MEGA:.1f}M opt={opt_name} "
              f"mesh={dict(mesh.shape)}",
-             params_m=cfg.param_count() / 1e6)
+             params_m=cfg.param_count() / MEGA)
 
     with use_mesh(mesh), parallel_context(ParallelContext()):
         abstract = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0)))

@@ -36,6 +36,8 @@ from typing import Dict, Tuple
 
 import numpy as np
 
+from repro.units import gbps_to_bytes_per_s
+
 from .channel import ChannelPlan
 from .config import NetworkConfig
 from .mac import MacConfig, mac_times
@@ -85,7 +87,7 @@ class GridResult:
         mi, pi, bi, ti, ii = np.unravel_index(int(self.speedup.argmax()),
                                               self.speedup.shape)
         cfg = NetworkConfig(
-            bandwidth=self.spec.bandwidths_gbps[bi] * 1e9 / 8,
+            bandwidth=gbps_to_bytes_per_s(self.spec.bandwidths_gbps[bi]),
             distance_threshold=self.spec.thresholds[ti],
             injection_prob=self.spec.injections[ii],
             channels=self.spec.plans[pi],
@@ -207,7 +209,8 @@ class BatchedDesignSpace:
     # evaluation
     # ------------------------------------------------------------------
 
-    def evaluate(self, spec: GridSpec = GridSpec()) -> GridResult:
+    def evaluate(self, spec: GridSpec | None = None) -> GridResult:
+        spec = spec if spec is not None else GridSpec()
         missing = [t for t in spec.thresholds if t not in self.eligibility]
         if missing:
             raise ValueError(
@@ -296,7 +299,7 @@ class BatchedDesignSpace:
             for pi, plan in enumerate(spec.plans):
                 by, ms, ac, Z, nz = per_plan[pi]
                 for bi, bw in enumerate(spec.bandwidths_gbps):
-                    bw_c = plan.channel_bandwidth(bw * 1e9 / 8)
+                    bw_c = plan.channel_bandwidth(gbps_to_bytes_per_s(bw))
                     t = mac_times(mac, by, ms, ac, bw_c)
                     if nz == 1:
                         t_ch = t[..., 0, :]

@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.units import bytes_per_s_to_gbps, gbps_to_bytes_per_s
+
 from .channel import ChannelPlan
 from .mac import MacConfig
 
@@ -20,7 +22,7 @@ from .mac import MacConfig
 @dataclasses.dataclass(frozen=True)
 class NetworkConfig:
     # --- paper SIII-B2 selection + shared-medium parameters ---
-    bandwidth: float = 64e9 / 8      # aggregate wireless B/s (64/96 Gb/s)
+    bandwidth: float = gbps_to_bytes_per_s(64)   # aggregate wireless B/s
     distance_threshold: int = 1      # NoP hops (paper sweep: 1..4)
     injection_prob: float = 0.5      # paper sweep: 0.10..0.80 step 0.05
     energy_pj_per_bit: float = 1.0   # ~1 pJ/bit mm-wave transceivers
@@ -28,8 +30,23 @@ class NetworkConfig:
     channels: ChannelPlan = ChannelPlan()
     mac: MacConfig = MacConfig()
 
+    def __post_init__(self):
+        if not self.bandwidth > 0:
+            raise ValueError(f"bandwidth must be positive bytes/s, got "
+                             f"{self.bandwidth!r}")
+        if not 0.0 <= self.injection_prob <= 1.0:
+            raise ValueError(f"injection_prob must be in [0, 1], got "
+                             f"{self.injection_prob!r}")
+        if self.distance_threshold < 0:
+            raise ValueError(f"distance_threshold must be >= 0 hops, "
+                             f"got {self.distance_threshold!r}")
+        if self.energy_pj_per_bit < 0:
+            raise ValueError(f"energy_pj_per_bit must be >= 0, got "
+                             f"{self.energy_pj_per_bit!r}")
+
     def describe(self) -> str:
-        return (f"{self.bandwidth * 8 / 1e9:.0f}Gb/s thr={self.distance_threshold} "
+        return (f"{bytes_per_s_to_gbps(self.bandwidth):.0f}Gb/s "
+                f"thr={self.distance_threshold} "
                 f"p={self.injection_prob:.2f} {self.mac.protocol} "
                 f"{self.channels.describe()}")
 

@@ -21,6 +21,8 @@ from typing import Dict, List, Union
 
 import numpy as np
 
+from repro.units import s_to_us
+
 from .trace import SimTrace, TraceEvent
 
 # plane -> process id (Perfetto sorts by pid; layers on top)
@@ -86,7 +88,8 @@ def chrome_trace_events(
             events.append({
                 "ph": "X", "name": ev.name, "cat": ev.cat or "event",
                 "pid": pid, "tid": tid_of(pid, ev.track),
-                "ts": ev.ts * 1e6, "dur": ev.dur * 1e6, "args": args,
+                "ts": s_to_us(ev.ts), "dur": s_to_us(ev.dur),
+                "args": args,
             })
             if ev.args.get("critical"):
                 # mirror onto the critical-path process so the blocking
@@ -97,7 +100,8 @@ def chrome_trace_events(
                     "ph": "X", "name": f"{ev.name}@{ev.track}",
                     "cat": "critpath", "pid": crit,
                     "tid": tid_of(crit, "critical path"),
-                    "ts": ev.ts * 1e6, "dur": ev.dur * 1e6, "args": args,
+                    "ts": s_to_us(ev.ts), "dur": s_to_us(ev.dur),
+                    "args": args,
                 })
         cpid = base + _COUNTER_PID
         for track, samples in sorted(st.counters.items()):
@@ -108,7 +112,7 @@ def chrome_trace_events(
                                "args": {"name": f"{glabel}: counters"}})
             for ts, value in samples:
                 events.append({"ph": "C", "name": track, "pid": cpid,
-                               "tid": 0, "ts": ts * 1e6,
+                               "tid": 0, "ts": s_to_us(ts),
                                "args": {"value": value}})
     return {"traceEvents": events, "displayTimeUnit": "ms",
             "otherData": {lbl: st.meta for lbl, st in traces.items()}}

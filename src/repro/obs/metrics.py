@@ -41,6 +41,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.units import s_to_ms
+
 from .trace import RESOURCE_CATS, SimTrace
 
 
@@ -320,7 +322,9 @@ def format_attribution(rows: List[dict], top: int = 12) -> str:
     for r in rows:
         lines.append(
             f"{r['layer']:>5} {r['track']:<12} {r['n_events']:>5} "
-            f"{r['service_s']*1e3:>9.3f}m {r['queue_s']*1e3:>9.3f}m "
-            f"{r['quiesce_s']*1e3:>9.3f}m {r['finish_s']*1e3:>9.3f}m  "
+            f"{s_to_ms(r['service_s']):>9.3f}m "
+            f"{s_to_ms(r['queue_s']):>9.3f}m "
+            f"{s_to_ms(r['quiesce_s']):>9.3f}m "
+            f"{s_to_ms(r['finish_s']):>9.3f}m  "
             f"{r['why']}")
     return "\n".join(lines)

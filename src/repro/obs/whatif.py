@@ -180,7 +180,7 @@ def _wireless_term(st: SimTrace, knobs: WhatIf, L: int) -> np.ndarray:
             c = int(track.split("/", 1)[0][2:])
             per_ch[c] = np.maximum(per_ch.get(c, np.zeros(L)), b)
         t = np.zeros(L)
-        for c in set(g) | set(per_ch):
+        for c in sorted(set(g) | set(per_ch)):
             t = np.maximum(t, g.get(c, np.zeros(L))
                            + per_ch.get(c, np.zeros(L)))
         return t / knobs.wireless_scale

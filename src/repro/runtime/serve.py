@@ -51,8 +51,9 @@ def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
 
 
 def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, n_tokens: int,
-             scfg: ServeConfig = ServeConfig()) -> jnp.ndarray:
+             scfg: ServeConfig | None = None) -> jnp.ndarray:
     """Greedy generation loop (example driver; jit per step)."""
+    scfg = scfg if scfg is not None else ServeConfig()
     prefill, decode_step, init_cache = make_serve_fns(cfg, scfg)
     B, P = prompt.shape
     cache = init_cache(B, P + n_tokens + 1)

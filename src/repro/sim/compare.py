@@ -25,10 +25,11 @@ import numpy as np
 
 from repro.core.simulator import simulate_hybrid, simulate_wired
 from repro.net.config import NetworkConfig, as_network
+from repro.units import gbps_to_bytes_per_s, s_to_ms
 
 from .engine import LINK_MODELS, PacketSim
 
-DEFAULT_NET = NetworkConfig(bandwidth=96e9 / 8)
+DEFAULT_NET = NetworkConfig(bandwidth=gbps_to_bytes_per_s(96))
 DEFAULT_POLICIES = ("static", "greedy", "adaptive", "oracle")
 
 
@@ -43,8 +44,8 @@ def fidelity_report(traces: Dict[str, object], net=None,
         an_base = simulate_wired(tr).total_time
         an_hyb = simulate_hybrid(tr, net).total_time
         an_sp = an_base / an_hyb
-        row = {"analytic": {"wired_ms": an_base * 1e3,
-                            "hybrid_ms": an_hyb * 1e3,
+        row = {"analytic": {"wired_ms": s_to_ms(an_base),
+                            "hybrid_ms": s_to_ms(an_hyb),
                             "speedup": an_sp}}
         for m in link_models:
             sim = PacketSim(tr, net, link_model=m)
@@ -53,7 +54,8 @@ def fidelity_report(traces: Dict[str, object], net=None,
             ev_sp = ev_base / ev_hyb
             rel = abs(ev_sp - an_sp) / an_sp
             worst[m] = max(worst[m], rel)
-            row[m] = {"wired_ms": ev_base * 1e3, "hybrid_ms": ev_hyb * 1e3,
+            row[m] = {"wired_ms": s_to_ms(ev_base),
+                      "hybrid_ms": s_to_ms(ev_hyb),
                       "speedup": ev_sp, "speedup_rel_err": rel,
                       "hybrid_vs_analytic": ev_hyb / an_hyb}
         out[wl] = row
@@ -88,7 +90,8 @@ def policy_report(traces: Dict[str, object], net=None,
             sp = sim.run_wired().total_time / res.total_time
             beats = bool(sp >= gbest - 1e-9)
             wins[p] += beats
-            row[p] = {"speedup": sp, "time_ms": res.total_time * 1e3,
+            row[p] = {"speedup": sp,
+                      "time_ms": s_to_ms(res.total_time),
                       "wireless_mb": res.wireless_bytes / 2**20,
                       "beats_grid": beats}
         out[wl] = row

@@ -54,6 +54,7 @@ from repro.core.simulator import (BOTTLENECKS, PJ_PER_BIT_DRAM,
                                   noc_energy_pj)
 from repro.core.topology import node_grid_coords
 from repro.core.traffic import TrafficTrace
+from repro.core.units import BITS_PER_BYTE, pj_to_j
 from repro.core.wireless import eligibility, wireless_energy_joules
 from repro.net.config import as_network
 from repro.net.mac import mac_packet_extra_bytes, mac_packet_times
@@ -244,12 +245,13 @@ class PacketSim:
         # analytic model; wired NoP bits = bytes x traversed links,
         # route-exact
         byte_links = float((tr.nbytes * self.route_len)[~mask].sum())
-        energy = (mac_energy_pj(tr)
-                  + float(tr.dram_bytes.sum()) * 8 * PJ_PER_BIT_DRAM
-                  + noc_energy_pj(tr)
-                  + byte_links * 8 * PJ_PER_BIT_NOP_HOP
-                  + (wl_bytes + extra_bytes) * 8
-                  * self.net.energy_pj_per_bit) * 1e-12
+        energy = pj_to_j(
+            mac_energy_pj(tr)
+            + float(tr.dram_bytes.sum()) * BITS_PER_BYTE * PJ_PER_BIT_DRAM
+            + noc_energy_pj(tr)
+            + byte_links * BITS_PER_BYTE * PJ_PER_BIT_NOP_HOP
+            + (wl_bytes + extra_bytes) * BITS_PER_BYTE
+            * self.net.energy_pj_per_bit)
         cut_busy, channel_busy, dram_busy, link_busy = busies
         return EventResult(
             total_time=float(layer_times.sum()),

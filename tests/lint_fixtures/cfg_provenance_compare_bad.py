@@ -1,0 +1,9 @@
+"""Fixture: provenance participates in equality."""
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Result:
+    value: float = 0.0
+    provenance: dict = None

@@ -1,0 +1,11 @@
+"""Fixture: provenance excluded from equality."""
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class Result:
+    value: float = 0.0
+    provenance: Optional[dict] = dataclasses.field(default=None,
+                                                   compare=False)

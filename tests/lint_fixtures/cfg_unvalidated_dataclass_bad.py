@@ -1,0 +1,9 @@
+"""Fixture: public config dataclass with no validation."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FixtureConfig:
+    bandwidth: float = 1.0
+    retries: int = 3

@@ -1,0 +1,18 @@
+"""Fixture: config validates in __post_init__ (and private
+configs are out of scope)."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FixtureConfig:
+    bandwidth: float = 1.0
+
+    def __post_init__(self):
+        if not self.bandwidth > 0:
+            raise ValueError("bandwidth must be positive")
+
+
+@dataclasses.dataclass
+class _ScratchConfig:
+    debug: bool = False

@@ -1,0 +1,8 @@
+"""Fixture: set iteration feeding ordered output."""
+
+
+def collect(items, extra):
+    out = []
+    for x in set(items) | set(extra):
+        out.append(x)
+    return out, [v for v in {1, 2, 3}]

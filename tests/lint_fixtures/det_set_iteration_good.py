@@ -1,0 +1,11 @@
+"""Fixture: sorted before iterating; order-insensitive
+consumers (sorted/sum) take the comprehension directly."""
+
+
+def collect(items, extra, hi):
+    out = []
+    for x in sorted(set(items) | set(extra)):
+        out.append(x)
+    lows = sorted((b for b in set(items) if b != hi), reverse=True)
+    total = sum(b for b in set(extra))
+    return out, lows, total

@@ -1,0 +1,12 @@
+"""Fixture: global-stream RNG draws."""
+
+import random
+
+import numpy as np
+
+
+def jitter(n):
+    a = np.random.rand(n)
+    b = random.random()
+    c = np.random.default_rng()
+    return a, b, c

@@ -1,0 +1,11 @@
+"""Fixture: explicitly seeded generators only."""
+
+import random
+
+import numpy as np
+
+
+def jitter(n, seed):
+    rng = np.random.default_rng(seed)
+    r = random.Random(seed)
+    return rng.random(n), r.random()

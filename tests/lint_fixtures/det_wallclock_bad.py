@@ -1,0 +1,8 @@
+"""Fixture: raw wall-clock reads in model code."""
+
+import time
+
+
+def elapsed():
+    t0 = time.perf_counter()
+    return time.time() - t0

@@ -1,0 +1,5 @@
+"""Fixture: injectable clock; no ambient reads."""
+
+
+def elapsed(now, t0):
+    return now - t0

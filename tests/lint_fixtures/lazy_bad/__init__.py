@@ -1,0 +1,10 @@
+"""Fixture package: lazy re-export table out of sync."""
+
+_SIM_EXPORTS = ("run_model", "does_not_exist")
+
+
+def __getattr__(name):
+    if name in _SIM_EXPORTS:
+        import lazy_bad.simmod
+        return getattr(lazy_bad.simmod, name)
+    raise AttributeError(name)

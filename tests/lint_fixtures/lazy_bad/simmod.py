@@ -1,0 +1,7 @@
+"""Fixture submodule: exports run_model only."""
+
+__all__ = ["run_model"]
+
+
+def run_model():
+    return 0

@@ -1,0 +1,10 @@
+"""Fixture package: lazy re-export table in sync."""
+
+_SIM_EXPORTS = ("run_model", "reset")
+
+
+def __getattr__(name):
+    if name in _SIM_EXPORTS:
+        import lazy_good.simmod
+        return getattr(lazy_good.simmod, name)
+    raise AttributeError(name)

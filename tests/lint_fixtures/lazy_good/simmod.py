@@ -1,0 +1,11 @@
+"""Fixture submodule: exports both lazy names."""
+
+__all__ = ["run_model", "reset"]
+
+
+def run_model():
+    return 0
+
+
+def reset():
+    return None

@@ -1,0 +1,5 @@
+"""Fixture: bare print in model code."""
+
+
+def report(x):
+    print(f"result: {x}")

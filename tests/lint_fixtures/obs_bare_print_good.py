@@ -1,0 +1,5 @@
+"""Fixture: output routed through the metrics logger."""
+
+
+def report(log, x):
+    log.info(f"result: {x}", value=x)

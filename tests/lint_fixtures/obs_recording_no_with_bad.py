@@ -1,0 +1,6 @@
+"""Fixture: recording() called without `with`."""
+
+
+def run(recording, st, sim):
+    recording(st)
+    return sim()

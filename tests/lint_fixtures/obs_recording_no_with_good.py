@@ -1,0 +1,6 @@
+"""Fixture: recording() as a context manager."""
+
+
+def run(recording, st, sim):
+    with recording(st):
+        return sim()

@@ -1,0 +1,8 @@
+"""Fixture: layer events recorded but never placed."""
+
+
+def record(SimTrace, times):
+    st = SimTrace(label="fixture")
+    for li, t in enumerate(times):
+        st.add_layer_event("layers", f"L{li}", li, 0.0, t, "layer")
+    return st

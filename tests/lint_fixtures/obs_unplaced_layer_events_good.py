@@ -1,0 +1,9 @@
+"""Fixture: layer events placed on the absolute timeline."""
+
+
+def record(SimTrace, times):
+    st = SimTrace(label="fixture")
+    for li, t in enumerate(times):
+        st.add_layer_event("layers", f"L{li}", li, 0.0, t, "layer")
+    st.place_layers(times)
+    return st

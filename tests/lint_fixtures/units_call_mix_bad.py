@@ -1,0 +1,5 @@
+"""Fixture: Gb/s handed to a bytes/s keyword."""
+
+
+def build(configure, peak_gbps):
+    return configure(bandwidth=peak_gbps)

@@ -1,0 +1,5 @@
+"""Fixture: keyword and value agree on bytes/s."""
+
+
+def build(configure, link_bw):
+    return configure(bandwidth=link_bw)

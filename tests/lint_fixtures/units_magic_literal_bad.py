@@ -1,0 +1,7 @@
+"""Fixture: inline scale factors instead of repro.units."""
+
+
+def to_bytes_per_s(rate_gbps, payload_bytes):
+    bw = rate_gbps * 1e9 / 8
+    bits = payload_bytes * 8
+    return bw, bits

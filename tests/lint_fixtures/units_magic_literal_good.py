@@ -1,0 +1,9 @@
+"""Fixture: conversions routed through repro.units helpers."""
+
+from repro.units import bytes_to_bits, gbps_to_bytes_per_s
+
+
+def to_bytes_per_s(rate_gbps, payload_bytes):
+    bw = gbps_to_bytes_per_s(rate_gbps)
+    bits = bytes_to_bits(payload_bytes)
+    return bw, bits

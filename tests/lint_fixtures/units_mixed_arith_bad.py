@@ -1,0 +1,5 @@
+"""Fixture: adds seconds to bytes."""
+
+
+def budget(window_s, payload_bytes):
+    return window_s + payload_bytes

@@ -1,0 +1,6 @@
+"""Fixture: same-unit arithmetic and unknown units stay clean."""
+
+
+def total(warmup_s, run_s, count):
+    elapsed_s = warmup_s + run_s
+    return elapsed_s, count + 1

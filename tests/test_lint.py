@@ -1,0 +1,228 @@
+"""repro.lint: golden fixtures per rule, suppression/baseline
+round-trips, CLI contract, and the tier-1 self-clean gate.
+
+The fixture convention (tests/lint_fixtures/README.md): one
+``<rule>_bad.py`` that must produce >= 1 finding of exactly that rule
+and one ``<rule>_good.py`` that must stay clean under it.
+"""
+
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.lint import (ALL_RULES, FAMILIES, iter_py_files,
+                        load_baseline, run_rules, write_baseline)
+from repro.lint.cli import main
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+FIXTURES = pathlib.Path(__file__).parent / "lint_fixtures"
+
+RULES_BY_NAME = {r.name: r for r in ALL_RULES}
+
+# rule name -> (bad fixture, good fixture), relative to FIXTURES
+FIXTURE_CASES = {
+    "units-mixed-arith": ("units_mixed_arith_bad.py",
+                          "units_mixed_arith_good.py"),
+    "units-magic-literal": ("units_magic_literal_bad.py",
+                            "units_magic_literal_good.py"),
+    "units-call-mix": ("units_call_mix_bad.py", "units_call_mix_good.py"),
+    "det-unseeded-rng": ("det_unseeded_rng_bad.py",
+                         "det_unseeded_rng_good.py"),
+    "det-wallclock": ("det_wallclock_bad.py", "det_wallclock_good.py"),
+    "det-set-iteration": ("det_set_iteration_bad.py",
+                          "det_set_iteration_good.py"),
+    "obs-bare-print": ("obs_bare_print_bad.py", "obs_bare_print_good.py"),
+    "obs-unplaced-layer-events": ("obs_unplaced_layer_events_bad.py",
+                                  "obs_unplaced_layer_events_good.py"),
+    "obs-recording-no-with": ("obs_recording_no_with_bad.py",
+                              "obs_recording_no_with_good.py"),
+    "cfg-unvalidated-dataclass": ("cfg_unvalidated_dataclass_bad.py",
+                                  "cfg_unvalidated_dataclass_good.py"),
+    "cfg-provenance-compare": ("cfg_provenance_compare_bad.py",
+                               "cfg_provenance_compare_good.py"),
+    "cfg-lazy-export-mismatch": ("lazy_bad/__init__.py",
+                                 "lazy_good/__init__.py"),
+}
+
+
+def _run_one(rule_name, relpath):
+    return run_rules((RULES_BY_NAME[rule_name],), [FIXTURES / relpath],
+                     search_roots=[FIXTURES], cwd=FIXTURES)
+
+
+def test_every_rule_has_a_fixture_pair():
+    assert set(FIXTURE_CASES) == set(RULES_BY_NAME)
+
+
+@pytest.mark.parametrize("rule_name", sorted(FIXTURE_CASES))
+def test_rule_flags_bad_fixture(rule_name):
+    bad, _ = FIXTURE_CASES[rule_name]
+    report = _run_one(rule_name, bad)
+    assert report.findings, f"{rule_name} missed {bad}"
+    assert {f.rule for f in report.findings} == {rule_name}
+    assert all(f.path == bad and f.line > 0 for f in report.findings)
+
+
+@pytest.mark.parametrize("rule_name", sorted(FIXTURE_CASES))
+def test_rule_passes_good_fixture(rule_name):
+    _, good = FIXTURE_CASES[rule_name]
+    report = _run_one(rule_name, good)
+    assert [f.render_text() for f in report.findings] == []
+
+
+def test_set_iteration_sorted_consumer_regression():
+    """A generator fed straight to sorted()/sum() is order-safe —
+    pinned against the dse.scaling false positive."""
+    report = _run_one("det-set-iteration", "det_set_iteration_good.py")
+    assert report.findings == [] and report.suppressed == 0
+
+
+# ---------------------------------------------------------------------------
+# suppressions and baseline
+# ---------------------------------------------------------------------------
+
+def test_inline_suppression_round_trip(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text("def report(x):\n"
+                 "    print(x)  # lint: disable=obs-bare-print\n"
+                 "    print(x)  # lint: disable\n"
+                 "    print(x)  # lint: disable=det-wallclock\n")
+    report = run_rules((RULES_BY_NAME["obs-bare-print"],), [f],
+                       cwd=tmp_path)
+    # line 2 (named) and line 3 (blanket) suppress; line 4 names the
+    # wrong rule so its finding still lands
+    assert report.suppressed == 2
+    assert [f_.line for f_ in report.findings] == [4]
+
+
+def test_baseline_round_trip(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text("def report(x):\n    print(x)\n")
+    rule = (RULES_BY_NAME["obs-bare-print"],)
+    first = run_rules(rule, [f], cwd=tmp_path)
+    assert len(first.findings) == 1
+
+    bl = tmp_path / "baseline.txt"
+    write_baseline(bl, first.findings)
+    fingerprints = load_baseline(bl)
+    assert fingerprints == {"mod.py:obs-bare-print:2"}
+
+    second = run_rules(rule, [f], baseline=fingerprints, cwd=tmp_path)
+    assert second.findings == [] and second.baselined == 1
+
+
+def test_checked_in_baseline_is_empty():
+    """Policy: the repo baseline exists (the mechanism is exercised)
+    but carries zero grandfathered fingerprints."""
+    assert load_baseline(REPO / "lint_baseline.txt") == set()
+
+
+def test_unit_tag_annotation_drives_inference(tmp_path):
+    """A ``# unit: <tag>`` comment tags the names on its line — the
+    untagged `window` below would never flag on its own."""
+    f = tmp_path / "mod.py"
+    f.write_text("def f(configure, window):\n"
+                 "    return configure(bandwidth=window)  # unit: gbps\n")
+    report = run_rules((RULES_BY_NAME["units-call-mix"],), [f],
+                       cwd=tmp_path)
+    assert len(report.findings) == 1
+    assert "gbps" in report.findings[0].message
+
+    untagged = tmp_path / "untagged.py"
+    untagged.write_text("def f(configure, window):\n"
+                        "    return configure(bandwidth=window)\n")
+    assert run_rules((RULES_BY_NAME["units-call-mix"],), [untagged],
+                     cwd=tmp_path).findings == []
+
+
+def test_parse_error_becomes_finding(tmp_path):
+    f = tmp_path / "broken.py"
+    f.write_text("def f(:\n")
+    report = run_rules(ALL_RULES, [f], cwd=tmp_path)
+    assert [x.rule for x in report.findings] == ["parse-error"]
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+# ---------------------------------------------------------------------------
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in ALL_RULES:
+        assert rule.name in out
+    for fam in FAMILIES:
+        assert f"[{fam}]" in out
+
+
+def test_cli_exit_codes_and_formats(tmp_path, capsys, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    f = tmp_path / "mod.py"
+    f.write_text("print('hi')\n")
+    assert main([str(f)]) == 1
+    text = capsys.readouterr().out
+    assert "mod.py:1:0: obs-bare-print" in text
+
+    assert main([str(f), "--format=github"]) == 1
+    gh = capsys.readouterr().out
+    assert gh.startswith("::error file=mod.py,line=1,")
+    assert "title=repro.lint obs-bare-print" in gh
+
+    clean = tmp_path / "ok.py"
+    clean.write_text("x = 1\n")
+    assert main([str(clean)]) == 0
+    assert main([str(tmp_path / "nope")]) == 2
+
+
+def test_cli_select_and_write_baseline(tmp_path, capsys, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    f = tmp_path / "mod.py"
+    f.write_text("import time\n\n"
+                 "def f():\n"
+                 "    print(time.time())\n")
+    # family select: only determinism runs, the bare print passes
+    assert main([str(f), "--select=determinism"]) == 1
+    out = capsys.readouterr().out
+    assert "det-wallclock" in out and "obs-bare-print" not in out
+    with pytest.raises(SystemExit):
+        main([str(f), "--select=not-a-rule"])
+    capsys.readouterr()
+
+    # --write-baseline grandfathers everything, next run is clean
+    assert main([str(f), "--write-baseline"]) == 0
+    capsys.readouterr()
+    assert main([str(f)]) == 0
+    assert main([str(f), "--baseline=/dev/null"]) == 1
+
+
+def test_module_entrypoint_runs_pure_stdlib(tmp_path):
+    """`python -m repro.lint` must work without numpy/jax on the path
+    (the CI lint-domain job runs it in a bare container)."""
+    f = tmp_path / "mod.py"
+    f.write_text("x = 1\n")
+    guard = ("import sys\n"
+             "sys.modules['numpy'] = None\n"
+             "sys.modules['jax'] = None\n"
+             "from repro.lint.cli import main\n"
+             f"sys.exit(main([{str(f)!r}]))\n")
+    proc = subprocess.run([sys.executable, "-c", guard],
+                          capture_output=True, text=True,
+                          env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin"},
+                          cwd=tmp_path)
+    assert proc.returncode == 0, proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# tier-1 gate: the repo's own source is lint-clean
+# ---------------------------------------------------------------------------
+
+def test_src_is_lint_clean():
+    """Pinned: `python -m repro.lint src/` exits 0 with the empty
+    baseline — every finding in src/ is fixed or inline-justified."""
+    report = run_rules(ALL_RULES, iter_py_files([SRC]),
+                       search_roots=[SRC], cwd=REPO)
+    assert [f.render_text() for f in report.findings] == []
+    assert report.files_scanned > 90

@@ -489,18 +489,22 @@ def test_npz_string_labels_round_trip(tmp_path):
 # ---------------------------------------------------------------------------
 
 def test_no_bare_prints_in_src():
-    """Everything under src/repro reports via obs.metrics; the logger
-    itself is the one allowed `print(` call site."""
+    """Everything under src/repro reports via obs.metrics.
+
+    Thin wrapper over `repro.lint`'s ``obs-bare-print`` rule (the
+    seed-era substring scan this replaces lives on as that rule, with
+    an AST-accurate call check and the allowlist in
+    `repro.lint.registry.PRINT_ALLOWED_SUFFIXES`).
+    """
     import pathlib
+
+    from repro.lint import iter_py_files, run_rules
+    from repro.lint.rules_trace import BarePrintRule
+
     root = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
-    offenders = [
-        str(p.relative_to(root))
-        for p in sorted(root.rglob("*.py"))
-        if p.name != "metrics.py"
-        for line in p.read_text().splitlines()
-        if "print(" in line.split("#")[0]
-    ]
-    assert offenders == []
+    report = run_rules((BarePrintRule(),), iter_py_files([root]),
+                       cwd=root.parents[1])
+    assert [f.render_text() for f in report.findings] == []
 
 
 # ---------------------------------------------------------------------------
