@@ -1,26 +1,45 @@
-"""Trend printer for the bench-history ledger.
+"""Trend printer + observatory CLI for the bench-history ledger.
 
 ``benchmarks/run.py`` appends one JSONL line per (run, row) to
 ``experiments/bench_history.jsonl``; this tool renders the trajectory
 of any metric as a text sparkline per row — the zero-dependency answer
-to "did that refactor move the benchmarks?".
+to "did that refactor move the benchmarks?" — and fronts the
+`repro.obs.report` observatory:
+
+- ``--detect`` runs the robust MAD changepoint/drift detector over
+  every (row, metric) series and **exits non-zero** when any series is
+  flagged (the CI drift gate).  Wall-time series are excluded unless
+  ``--include-wall`` — machine-to-machine wall noise must not fail CI.
+- ``--html PATH`` writes the self-contained inline-SVG observatory
+  report (trends per row/metric, wall-time trajectories, per-entry
+  config-hash column, flagged points marked).
 
 Usage:
   PYTHONPATH=src python benchmarks/history.py --plot-text
   PYTHONPATH=src python benchmarks/history.py --plot-text \
       --row fig_critpath_whatif --metric mean_div --last 20
+  PYTHONPATH=src python benchmarks/history.py --detect
+  PYTHONPATH=src python benchmarks/history.py --html \
+      experiments/observatory.html
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
 BARS = "▁▂▃▄▅▆▇█"
 
 
+def _repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
 def sparkline(values) -> str:
+    if not values:
+        return ""
     lo, hi = min(values), max(values)
     if hi == lo:
         return BARS[0] * len(values)
@@ -28,8 +47,9 @@ def sparkline(values) -> str:
                    for v in values)
 
 
-def plot_text(entries, row=None, metric=None, last=30, file=sys.stdout):
+def plot_text(entries, row=None, metric=None, last=30, file=None):
     """One line per (row, metric): sparkline + first/latest values."""
+    file = file if file is not None else sys.stdout   # late-bound for capture
     series = {}
     for e in entries:
         if row and e.get("row") != row:
@@ -49,15 +69,35 @@ def plot_text(entries, row=None, metric=None, last=30, file=sys.stdout):
 
 
 def main(argv=None) -> int:
-    from benchmarks.run import history_path, load_history
-    default = history_path(os.path.join(os.path.dirname(__file__), "..",
-                                        "experiments",
-                                        "bench_results.json"))
+    try:
+        from benchmarks.run import history_path, load_history
+    except ImportError:    # script run: benchmarks/ itself is sys.path[0]
+        sys.path.insert(0, _repo_root())
+        from benchmarks.run import history_path, load_history
+    results_default = os.path.join(_repo_root(), "experiments",
+                                   "bench_results.json")
+    default = history_path(results_default)
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--plot-text", action="store_true",
                     help="render each metric's trajectory as a sparkline")
+    ap.add_argument("--detect", action="store_true",
+                    help="robust MAD drift/changepoint detection; exits "
+                         "1 when any (row, metric) series is flagged")
+    ap.add_argument("--include-wall", action="store_true",
+                    help="also gate the us_per_call wall-time series in "
+                         "--detect (off by default: wall noise across "
+                         "machines must not fail CI)")
+    ap.add_argument("--threshold", type=float, default=None,
+                    help="robust z-score threshold for --detect/--html "
+                         "(default: repro.obs.report's)")
+    ap.add_argument("--html", metavar="PATH", default=None,
+                    help="write the self-contained observatory HTML "
+                         "report to PATH")
     ap.add_argument("--file", default=default,
                     help="history ledger (default: %(default)s)")
+    ap.add_argument("--results", default=results_default,
+                    help="committed bench_results.json for the report's "
+                         "reference lines (default: %(default)s)")
     ap.add_argument("--row", default=None, help="restrict to one row")
     ap.add_argument("--metric", default=None,
                     help="restrict to one metric key")
@@ -68,13 +108,38 @@ def main(argv=None) -> int:
     if not entries:
         print(f"no history at {args.file}", file=sys.stderr)
         return 1
+    if args.row:
+        entries = [e for e in entries if e.get("row") == args.row]
+
+    rc = 0
+    if args.detect or args.html:
+        from repro.obs import report as obs_report
+        kw = {}
+        if args.threshold is not None:
+            kw["threshold"] = args.threshold
+    if args.html:
+        results = {}
+        if os.path.exists(args.results):
+            with open(args.results) as f:
+                results = json.load(f)
+        obs_report.write_html(args.html, entries, results, **kw)
+        print(f"observatory report -> {args.html}")
+    if args.detect:
+        findings = obs_report.detect_all(
+            entries, include_wall=args.include_wall, **kw)
+        if findings:
+            print(obs_report.format_findings(findings), file=sys.stderr)
+            rc = 1
+        else:
+            print(f"history detect OK ({len(entries)} entries, "
+                  "no series flagged)")
     if args.plot_text:
         plot_text(entries, args.row, args.metric, args.last)
-    else:
+    elif not (args.detect or args.html):
         rows = sorted({e.get("row") for e in entries if "row" in e})
         print(f"{len(entries)} entries, {len(rows)} rows: "
               + ", ".join(rows))
-    return 0
+    return rc
 
 
 if __name__ == "__main__":

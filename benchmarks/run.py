@@ -30,12 +30,41 @@ import time
 #: the _bench_meta key holding per-row wall time + derived metrics
 META_KEY = "_bench_meta"
 
-#: per-row relative tolerance overrides for --check (every row is
-#: seeded/deterministic, so the default only needs to absorb float
-#: jitter across platforms; raise a row's entry here if a legitimate
-#: source of run-to-run variance ever lands)
+#: Per-row relative tolerance overrides for ``--check``.  CI gates
+#: EVERY row with committed ``_bench_meta`` (``--check`` with no
+#: ``--only``), so this table is the one place that documents how much
+#: drift each row may absorb and why.  Every row is seeded and
+#: deterministic; the default only needs to cover float jitter across
+#: BLAS builds / platforms.  The full row table:
+#:
+#:   row                       rtol     nature of the row
+#:   ------------------------  -------  -----------------------------
+#:   fig2_bottleneck           default  closed-form GEMINI shares
+#:   fig4_speedup              default  batched sweep, closed form
+#:   fig5_heatmap              default  batched sweep, closed form
+#:   fig4_mac_channels         default  batched sweep, closed form
+#:   sim_fidelity              default  event engine vs analytic
+#:   sim_policies              default  seeded policies, deterministic
+#:   fig_critpath_whatif       default  DAG replay, exact arithmetic
+#:   llm_collectives           default  collective lowering, closed form
+#:   scaling_frontier          default  batched sweep, closed form
+#:   hetero_codesign           1e-4     seeded annealer: accept/reject
+#:                                      branches sit on float compares,
+#:                                      so cross-platform reassociation
+#:                                      can flip a late SA step
+#:   balancer_vs_sweep         default  integer win counts
+#:   mapping_sensitivity       default  closed-form ratio
+#:   edp_report                default  closed-form energy-delay
+#:   roofline_table_*          default  integer cell counts
+#:   hybrid_plane_report       default  dryrun-derived, deterministic
+#:   dryrun_summary            default  integer ok counts
+#:
+#: Raise a row's entry here (with a rationale line above it) if a
+#: legitimate source of run-to-run variance ever lands; never widen
+#: "default" to paper over a real regression.
 CHECK_RTOL = {
     "default": 1e-6,
+    "hetero_codesign": 1e-4,
 }
 CHECK_ATOL = 1e-12
 

@@ -1,0 +1,88 @@
+"""Meta-observability walkthrough: profile the framework, then audit
+the bench ledger.
+
+Two halves, mirroring `repro.obs`'s two self-observation planes:
+
+1. **Self-profiling** (`obs.profile`): run the paper sweep and an
+   event-engine simulation under ``with profiling() as prof:``, print
+   the hierarchical phase table (wall / calls / peak-ndarray-bytes,
+   with the >=90%-attribution coverage footer), and export the phases
+   merged with the recorded sim trace — the "framework" process sits
+   next to the simulated-time planes at https://ui.perfetto.dev.
+2. **The observatory** (`obs.report`): aggregate the committed
+   ``experiments/bench_history.jsonl`` ledger + ``bench_results.json``
+   into the self-contained HTML trend report, and run the robust MAD
+   drift detector over every (row, metric) series.
+
+    PYTHONPATH=src python examples/observatory.py [--quick] [--out=DIR]
+
+``--quick`` trims the profiled sweep to one workload for CI smoke runs.
+"""
+
+import json
+import os
+import sys
+
+from repro.core import NetworkConfig, make_trace
+from repro.core.dse import sweep_all
+from repro.obs import (build_html, detect_all, export_chrome_trace,
+                       format_findings, profile_report, profiling)
+from repro.sim import PacketSim
+
+
+def profile_half(workloads, out_dir: str) -> None:
+    traces = {wl: make_trace(wl) for wl in workloads}
+    net = NetworkConfig(bandwidth=96e9 / 8)
+    with profiling() as prof:
+        sweep_all(traces)
+        sim = PacketSim(traces[workloads[0]], net, record=True)
+        res = sim.run("greedy")
+    print("== framework self-profile: paper sweep + one event run ==")
+    print(profile_report(prof))
+
+    merged = {"sim": res.trace, "profile": prof.to_trace()}
+    path = os.path.join(out_dir, "observatory_profile.json")
+    export_chrome_trace(merged, path)
+    print(f"\nPerfetto export (sim planes + 'framework' process) -> "
+          f"{path}")
+
+
+def observatory_half(out_dir: str) -> None:
+    # reuse the bench tooling's ledger loader (stdlib, torn-tail safe)
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.run import history_path, load_history
+
+    results_file = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "experiments", "bench_results.json")
+    entries = load_history(history_path(results_file))
+    results = {}
+    if os.path.exists(results_file):
+        with open(results_file) as f:
+            results = json.load(f)
+
+    print(f"\n== bench observatory: {len(entries)} ledger entries ==")
+    findings = detect_all(entries)
+    print(format_findings(findings) or
+          "robust MAD detector: no series flagged")
+    path = os.path.join(out_dir, "observatory.html")
+    with open(path, "w", encoding="utf-8") as f:
+        f.write(build_html(entries, results))
+    print(f"HTML trend report -> {path}")
+
+
+def main() -> int:
+    quick = "--quick" in sys.argv
+    out_dir = "experiments/traces"
+    for a in sys.argv[1:]:
+        if a.startswith("--out="):
+            out_dir = a.split("=", 1)[1]
+    os.makedirs(out_dir, exist_ok=True)
+    profile_half(["zfnet"] if quick else ["zfnet", "resnet50", "vgg16"],
+                 out_dir)
+    observatory_half(out_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,6 +25,7 @@ from repro.net.batched import (BatchedDesignSpace, GridResult, GridSpec,
 from repro.net.channel import ChannelPlan
 from repro.net.config import NetworkConfig
 from repro.net.mac import MacConfig
+from repro.obs import profile as obs_profile
 from repro.obs.metrics import DEFAULT_REGISTRY
 from repro.obs.provenance import make_provenance
 
@@ -99,6 +100,14 @@ def batched_design_space(trace: TrafficTrace,
     cached = getattr(trace, "_batched_dse", None)
     if cached is not None and cached[0] == key:
         return cached[1]
+    with obs_profile.phase("dse.build_design_space"):
+        built = _build_design_space(trace, thresholds)
+    trace._batched_dse = (key, built)
+    return built
+
+
+def _build_design_space(trace: TrafficTrace,
+                        thresholds) -> BatchedDesignSpace:
     cut_mat, cut_bw = trace.cut_matrix()
     n_msg, n_cuts = len(trace.nbytes), cut_mat.shape[1]
     inc_cut = cut_mat[trace.inc_link]                  # (E, C)
@@ -131,7 +140,7 @@ def batched_design_space(trace: TrafficTrace,
         grid=trace.topo.config.grid,
         node_coords=node_grid_coords(trace.topo),
     )
-    trace._batched_dse = (key, built)
+    obs_profile.note_ndarray(pkt_cut, cut_base)
     return built
 
 
@@ -159,16 +168,17 @@ def sweep_all(traces: Dict[str, TrafficTrace],
                 for bw in BANDWIDTHS_GBPS:
                     out.append(_result_from_grid(wl, bw,
                                                  res.ideal_grid(bw)))
-    prov = make_provenance(
-        "dse.sweep_all",
-        {"workloads": sorted(traces), "engine": engine,
-         "thresholds": THRESHOLDS, "injections": INJECTIONS,
-         "bandwidths_gbps": BANDWIDTHS_GBPS},
-        points=len(traces) * len(THRESHOLDS) * len(INJECTIONS)
-        * len(BANDWIDTHS_GBPS),
-        wall_s=t["seconds"])
-    for r in out:
-        r.provenance = prov
+    with obs_profile.phase("dse.provenance"):
+        prov = make_provenance(
+            "dse.sweep_all",
+            {"workloads": sorted(traces), "engine": engine,
+             "thresholds": THRESHOLDS, "injections": INJECTIONS,
+             "bandwidths_gbps": BANDWIDTHS_GBPS},
+            points=len(traces) * len(THRESHOLDS) * len(INJECTIONS)
+            * len(BANDWIDTHS_GBPS),
+            wall_s=t["seconds"])
+        for r in out:
+            r.provenance = prov
     return out
 
 

@@ -75,10 +75,13 @@ UNITS_EXEMPT_SUFFIXES = ("repro/units.py", "repro/core/units.py")
 #: wall-clock reads allowed only here.  Rationale per entry:
 #: - obs/metrics.py: `MetricsRegistry.span` is the ONE sanctioned
 #:   wall-timer; every other module times through it.
+#: - obs/profile.py: the phase profiler — measuring the framework's
+#:   own wall time is its purpose; every other module profiles through
+#:   `profile.phase` / `MetricsRegistry.span`, never a raw clock.
 #: - launch/: CLI drivers that measure real JAX executions — wall
 #:   clock is the measurement, as in benchmarks/.
 #: - benchmarks/: regression timings are wall-clock by definition.
-WALLCLOCK_ALLOWED_SUFFIXES = ("obs/metrics.py",)
+WALLCLOCK_ALLOWED_SUFFIXES = ("obs/metrics.py", "obs/profile.py")
 WALLCLOCK_ALLOWED_SEGMENTS = ("launch", "benchmarks")
 
 #: module-level numpy legacy RNG functions (seed-global state).

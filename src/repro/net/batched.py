@@ -36,6 +36,7 @@ from typing import Dict, Tuple
 
 import numpy as np
 
+from repro.obs import profile as obs_profile
 from repro.units import gbps_to_bytes_per_s
 
 from .channel import ChannelPlan
@@ -210,6 +211,10 @@ class BatchedDesignSpace:
     # ------------------------------------------------------------------
 
     def evaluate(self, spec: GridSpec | None = None) -> GridResult:
+        with obs_profile.phase("net.batched.evaluate"):
+            return self._evaluate(spec)
+
+    def _evaluate(self, spec: GridSpec | None) -> GridResult:
         spec = spec if spec is not None else GridSpec()
         missing = [t for t in spec.thresholds if t not in self.eligibility]
         if missing:
@@ -219,21 +224,26 @@ class BatchedDesignSpace:
                 f"(batched_design_space(trace, thresholds=...))")
         L, C = self.n_layers, len(self.cut_bw)
         NT, NI = len(spec.thresholds), len(spec.injections)
-        bucket = self._buckets(spec.injections)
+        with obs_profile.phase("net.batched.buckets"):
+            bucket = self._buckets(spec.injections)
 
         # --- wired plane: removed cut loads and t_nop, per (thr, inj) ---
         t_nop = np.empty((NT, L, NI))
         elig = [self.eligibility[t] for t in spec.thresholds]
-        for ti, e in enumerate(elig):
-            lay_e, nb_e, b_e = self.layer[e], self.nbytes[e], bucket[e]
-            # one fused bincount over the (cut, layer, bucket) index space
-            seg = (np.arange(C)[:, None] * L + lay_e[None, :]).ravel()
-            removed = self._cum(
-                seg, C * L, np.broadcast_to(b_e, (C, len(b_e))).ravel(), NI,
-                weights=(self.pkt_cut[e].T * nb_e).ravel(),
-            ).reshape(C, L, NI)
-            residual = self.cut_base.T[:, :, None] - removed
-            t_nop[ti] = (residual / self.cut_bw[:, None, None]).max(axis=0)
+        with obs_profile.phase("net.batched.wired"):
+            for ti, e in enumerate(elig):
+                lay_e, nb_e, b_e = self.layer[e], self.nbytes[e], bucket[e]
+                # one fused bincount over the (cut, layer, bucket) index
+                # space
+                seg = (np.arange(C)[:, None] * L + lay_e[None, :]).ravel()
+                removed = self._cum(
+                    seg, C * L,
+                    np.broadcast_to(b_e, (C, len(b_e))).ravel(), NI,
+                    weights=(self.pkt_cut[e].T * nb_e).ravel(),
+                ).reshape(C, L, NI)
+                residual = self.cut_base.T[:, :, None] - removed
+                t_nop[ti] = (residual / self.cut_bw[:, None, None]).max(axis=0)
+            obs_profile.note_ndarray(t_nop)
 
         # --- wireless plane: per-plan (bytes, msgs, active) aggregates,
         # with a zone-class axis (0..Z-1 zone-local, Z global) when the
@@ -241,6 +251,41 @@ class BatchedDesignSpace:
         # non-ideal MACs and are skipped otherwise ---
         need_counts = any(m.protocol != "ideal" for m in spec.macs)
         bmin_cache: Dict[tuple, np.ndarray] = {}
+        with obs_profile.phase("net.batched.wireless"):
+            per_plan = self._wireless_aggregates(
+                spec, elig, bucket, bmin_cache, need_counts, L, NI)
+
+        # --- closed-form assembly over (mac, plan, bandwidth) ---
+        with obs_profile.phase("net.batched.assemble"):
+            shape = (len(spec.macs), len(spec.plans),
+                     len(spec.bandwidths_gbps), NT, NI)
+            total = np.empty(shape)
+            # floor is (NT, L, NI): the wireless-independent layer terms
+            floor = np.maximum(self.t_rest[None, :, None], t_nop)
+            for mi, mac in enumerate(spec.macs):
+                for pi, plan in enumerate(spec.plans):
+                    by, ms, ac, Z, nz = per_plan[pi]
+                    for bi, bw in enumerate(spec.bandwidths_gbps):
+                        bw_c = plan.channel_bandwidth(
+                            gbps_to_bytes_per_s(bw))
+                        t = mac_times(mac, by, ms, ac, bw_c)
+                        if nz == 1:
+                            t_ch = t[..., 0, :]
+                        else:   # global phase + concurrent zone-local
+                            t_ch = t[..., Z, :] + t[..., :Z, :].max(axis=3)
+                        t_wl = t_ch.max(axis=2)
+                        total[mi, pi, bi] = np.maximum(floor, t_wl) \
+                            .sum(axis=1)
+            obs_profile.note_ndarray(total)
+        return GridResult(spec, self.base_time, total,
+                          self.base_time / total)
+
+    def _wireless_aggregates(self, spec, elig, bucket, bmin_cache,
+                             need_counts, L, NI):
+        """Per-plan (bytes, msgs, active) bucketed aggregates — the
+        wireless half of `evaluate`, split out so the profiler can
+        charge it as one phase."""
+        NT = len(elig)
         per_plan = []
         for plan in spec.plans:
             n_ch = plan.n_channels
@@ -288,24 +333,6 @@ class BatchedDesignSpace:
                             np.where(e, bucket, NI)[order], starts)
                     ac[ti] = self._cum(gseg, L * n_ch * nz, bmin_cache[bk],
                                        NI).reshape(L, n_ch, nz, NI)
+            obs_profile.note_ndarray(by, ms, ac)
             per_plan.append((by, ms, ac, Z, nz))
-
-        # --- closed-form assembly over (mac, plan, bandwidth) ---
-        shape = (len(spec.macs), len(spec.plans), len(spec.bandwidths_gbps),
-                 NT, NI)
-        total = np.empty(shape)
-        floor = np.maximum(self.t_rest[None, :, None], t_nop)  # (NT, L, NI)
-        for mi, mac in enumerate(spec.macs):
-            for pi, plan in enumerate(spec.plans):
-                by, ms, ac, Z, nz = per_plan[pi]
-                for bi, bw in enumerate(spec.bandwidths_gbps):
-                    bw_c = plan.channel_bandwidth(gbps_to_bytes_per_s(bw))
-                    t = mac_times(mac, by, ms, ac, bw_c)
-                    if nz == 1:
-                        t_ch = t[..., 0, :]
-                    else:   # global phase + concurrent zone-local phases
-                        t_ch = t[..., Z, :] + t[..., :Z, :].max(axis=3)
-                    t_wl = t_ch.max(axis=2)
-                    total[mi, pi, bi] = np.maximum(floor, t_wl).sum(axis=1)
-        return GridResult(spec, self.base_time, total,
-                          self.base_time / total)
+        return per_plan

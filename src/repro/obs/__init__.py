@@ -25,6 +25,15 @@ requested (`PacketSim(..., record=True)`) or installed
 - `whatif`     — trace-driven what-if projection: replay the recorded
   layer terms under scaled wireless/DRAM/wired resources or a new
   channel plan, with a re-simulation validation harness.
+- `profile`    — the framework's *self*-time: a deterministic
+  hierarchical phase profiler (`with profiling() as prof:`) with the
+  same zero-cost-when-disabled structural guarantee as `SimTrace`;
+  `prof.to_trace()` exports the phases as a "framework" Perfetto
+  process next to the simulated-time planes.
+- `report`     — the cross-run bench observatory (stdlib-only): MAD
+  changepoint/drift detection over the `bench_history.jsonl` ledger
+  and a self-contained inline-SVG HTML trend report
+  (`benchmarks/history.py --detect / --html`).
 - `provenance` — `dse.provenance` records (config hash, seed, wall
   time, points evaluated) stamped into every sweep result.
 """
@@ -36,7 +45,11 @@ from .export import (chrome_trace_events, export_chrome_trace, export_npz,
 from .metrics import (DEFAULT_REGISTRY, MetricsRegistry, attribution_report,
                       attribution_summary, format_attribution, get_logger,
                       utilization_timeline)
+from .profile import (PhaseProfiler, PhaseRecord, active_profiler,
+                      note_ndarray, phase, profile_report, profiling)
 from .provenance import config_hash, make_provenance
+from .report import (build_html, detect_all, detect_series,
+                     format_findings, history_series, write_html)
 from .trace import SimTrace, TraceEvent, active_recorder, recording
 from .whatif import Projection, WhatIf, project, project_grid, validate
 
@@ -49,5 +62,9 @@ __all__ = [
     "CriticalPath", "CritSegment", "busy_shares", "critical_path",
     "critical_vs_busy", "mark_critical",
     "Projection", "WhatIf", "project", "project_grid", "validate",
+    "PhaseProfiler", "PhaseRecord", "active_profiler", "note_ndarray",
+    "phase", "profile_report", "profiling",
+    "build_html", "detect_all", "detect_series", "format_findings",
+    "history_series", "write_html",
     "config_hash", "make_provenance",
 ]

@@ -34,6 +34,10 @@ _CRIT_PID = 8             # critical-path swim-lane (obs.critpath marks)
 _COUNTER_PID = 9
 _OTHER_PID = 10           # unrecognised planes (was colliding with
 #                           the counter pid when it was len(_PLANE_PIDS))
+_FRAMEWORK_PID = 11       # self-profiling phases (obs.profile.to_trace):
+#                           the framework's own wall time renders as its
+#                           own process under the simulated-time planes
+_PLANE_PIDS["framework"] = _FRAMEWORK_PID
 _PID_STRIDE = 16          # per-trace offset when merging several traces
 
 

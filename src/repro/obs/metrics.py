@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.units import s_to_ms
 
+from . import profile as _profile
 from .trace import RESOURCE_CATS, SimTrace
 
 
@@ -115,14 +116,34 @@ class MetricsRegistry:
     @contextlib.contextmanager
     def span(self, name: str, **labels):
         """Wall-time a block into histogram ``name``; yields a dict
-        whose ``seconds`` key holds the elapsed time on exit."""
+        whose ``seconds`` key holds the elapsed time on exit.
+
+        Exception-safe: a raising body still records its elapsed time,
+        but under an extra ``outcome=error`` label — the sample is
+        never dropped and never pollutes the success distribution (the
+        success-path histogram keys are unchanged).  Callers that read
+        ``out["seconds"]`` after the block (placement anneal, the dse
+        sweeps) only do so on success — on error the exception
+        propagates before any provenance is stamped, which is the
+        audited intent.
+
+        Every span also opens a `profile.phase` of the same name, so
+        under ``with obs.profiling():`` the registry's spans double as
+        top-level profiler phases at zero extra call-site cost.
+        """
         out = {"seconds": 0.0}
-        t0 = time.perf_counter()
-        try:
-            yield out
-        finally:
-            out["seconds"] = time.perf_counter() - t0
-            self.histogram(name, **labels).observe(out["seconds"])
+        failed = False
+        with _profile.phase(name):
+            t0 = time.perf_counter()
+            try:
+                yield out
+            except BaseException:
+                failed = True
+                raise
+            finally:
+                out["seconds"] = time.perf_counter() - t0
+                lbl = dict(labels, outcome="error") if failed else labels
+                self.histogram(name, **lbl).observe(out["seconds"])
 
     def logger(self, name: str, stream=None) -> "MetricsLogger":
         return MetricsLogger(self, name, stream)

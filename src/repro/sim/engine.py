@@ -58,6 +58,7 @@ from repro.core.units import BITS_PER_BYTE, pj_to_j
 from repro.core.wireless import eligibility, wireless_energy_joules
 from repro.net.config import as_network
 from repro.net.mac import mac_packet_extra_bytes, mac_packet_times
+from repro.obs import profile as obs_profile
 from repro.obs import trace as obs_trace
 
 from .calendar import ResourcePool, first_occurrence, segment_cumsum
@@ -128,7 +129,12 @@ class PacketSim:
         self.link_model = link_model
         self.dram_model = dram_model
         self.record = record
+        with obs_profile.phase("sim.precompute"):
+            self._precompute()
 
+    def _precompute(self) -> None:
+        """Route-geometry / FIFO / eligibility precompute (init body)."""
+        trace = self.trace
         cfg = trace.topo.config
         self.link_bw = cfg.nop_bw_per_side
         cut_mat, self.cut_bw = trace.cut_matrix()
@@ -385,11 +391,16 @@ class PacketSim:
 
     def _run_planned(self, mask: np.ndarray, name: str,
                      st=None) -> EventResult:
-        t_nop, t_wl, t_dram, extra, busies = self._planned_parts(mask)
-        if st is not None:
-            self._record_planned(st, mask)
-        return self._finish(mask, t_nop, t_wl, t_dram, extra, busies, name,
-                            st)
+        with obs_profile.phase("sim.planned"):
+            with obs_profile.phase("sim.planned_parts"):
+                t_nop, t_wl, t_dram, extra, busies = \
+                    self._planned_parts(mask)
+            if st is not None:
+                with obs_profile.phase("sim.record_planned"):
+                    self._record_planned(st, mask)
+            with obs_profile.phase("sim.finish"):
+                return self._finish(mask, t_nop, t_wl, t_dram, extra,
+                                    busies, name, st)
 
     def _record_planned(self, st, mask: np.ndarray) -> None:
         """Reconstruct the per-packet events a batched layer pop implies.
@@ -507,6 +518,13 @@ class PacketSim:
 
     def _run_online(self, policy, mask: Optional[np.ndarray],
                     name: str, st=None) -> EventResult:
+        with obs_profile.phase("sim.online"):
+            return self._run_online_body(policy, mask, name, st)
+
+    def _run_online_body(self, policy, mask: Optional[np.ndarray],
+                         name: str, st=None) -> EventResult:
+        """The per-layer / per-packet event loop (`sim.online`'s self
+        time in a profile is exactly this loop)."""
         tr, mac = self.trace, self.net.mac
         L, M = tr.n_layers, len(tr.nbytes)
         adaptive = self.link_model == "adaptive"
@@ -682,8 +700,10 @@ class PacketSim:
         else:
             link_busy = None
         busies = (cut_busy, wl_airtime, busy_ld.sum(axis=0), link_busy)
-        return self._finish(injected, t_nop, t_wl, self._dram_terms(busy_ld),
-                            extra_bytes, busies, name, st)
+        with obs_profile.phase("sim.finish"):
+            return self._finish(injected, t_nop, t_wl,
+                                self._dram_terms(busy_ld),
+                                extra_bytes, busies, name, st)
 
     # ------------------------------------------------------------------
     # entry points
@@ -701,7 +721,8 @@ class PacketSim:
         from .policies import get_policy
         pol = get_policy(policy)
         st = self._recorder(pol.name)
-        mask = pol.plan_trace(self)
+        with obs_profile.phase("sim.plan"):
+            mask = pol.plan_trace(self)
         if mask is not None:
             mask = np.asarray(mask, bool)
             if self.link_model != "adaptive":

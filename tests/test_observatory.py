@@ -1,0 +1,240 @@
+"""The cross-run bench observatory: robust MAD detection, the HTML
+report, the `history.py` CLI gate, and ledger-tooling edge cases."""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+import benchmarks.history as hist_mod
+from repro.obs import report as obs_report
+from repro.obs import build_html, detect_all, detect_series
+
+run_mod = pytest.importorskip("benchmarks.run")
+
+
+def _entry(row, ts, metrics, wall=100.0, h="abc123"):
+    return {"row": row, "ts": ts, "us_per_call": wall,
+            "derived": " ".join(f"{k}={v:g}" for k, v in metrics.items()),
+            "metrics": metrics, "hash": h}
+
+
+def _ledger(values, row="r", metric="m"):
+    return [_entry(row, 1700000000.0 + i, {metric: v})
+            for i, v in enumerate(values)]
+
+
+# ---------------------------------------------------------------------------
+# detector
+# ---------------------------------------------------------------------------
+
+def test_detect_series_flags_injected_regression():
+    findings = detect_series([1.0] * 10 + [2.0])
+    kinds = {f["kind"] for f in findings}
+    assert "drift" in kinds
+    f = next(f for f in findings if f["kind"] == "drift")
+    assert f["index"] == 10 and f["value"] == 2.0
+
+
+def test_detect_series_flags_sustained_level_shift():
+    findings = detect_series([1.0] * 8 + [2.0] * 8)
+    f = next(f for f in findings if f["kind"] == "changepoint")
+    assert f["index"] == 8
+    assert f["baseline"] == 1.0 and f["value"] == 2.0
+
+
+def test_detect_series_clean_on_constant_noisy_and_short():
+    assert detect_series([1.0] * 20) == []
+    # jitter well inside 4 robust scales (varied levels, so MAD > 0)
+    noisy = [1.0 + 0.001 * ((i * 7) % 11) for i in range(20)]
+    assert detect_series(noisy) == []
+    # below min_points: a young ledger is always clean
+    assert detect_series([1.0, 100.0]) == []
+    assert detect_series([1.0, 1.0, 1.0, 100.0]) == []
+
+
+def test_detect_series_outlier_does_not_mask_shift():
+    # one early outlier must not inflate the scale enough to hide a
+    # genuine 2x level shift (the median/MAD rationale)
+    vals = [1.0] * 4 + [50.0] + [1.0] * 3 + [2.0] * 8
+    assert any(f["kind"] == "changepoint" for f in detect_series(vals))
+
+
+def test_detect_all_wall_series_excluded_by_default():
+    entries = [_entry("r", 1700000000.0 + i, {"m": 1.0},
+                      wall=100.0 * (2 ** i)) for i in range(12)]
+    assert detect_all(entries) == []
+    walled = detect_all(entries, include_wall=True)
+    assert walled and all(f["metric"] == obs_report.WALL_METRIC
+                          for f in walled)
+
+
+def test_detect_all_annotates_ts_and_hash():
+    entries = _ledger([1.0] * 10 + [2.0])
+    entries[-1]["hash"] = "deadbeef"
+    f = detect_all(entries)[0]
+    assert f["row"] == "r" and f["metric"] == "m"
+    assert f["hash"] == "deadbeef"
+    assert f["ts"] == entries[-1]["ts"]
+
+
+def test_detect_all_clean_on_committed_ledger():
+    """The acceptance pin: --detect must pass on the repo's own ledger."""
+    path = run_mod.history_path("experiments/bench_results.json")
+    entries = run_mod.load_history(path)
+    assert entries, "committed ledger missing"
+    assert detect_all(entries) == []
+
+
+def test_history_series_skips_torn_fields():
+    entries = [
+        {"row": "r", "ts": 1.0, "us_per_call": "nan",
+         "metrics": {"m": 1.0, "bad": "oops", "inf": float("inf")}},
+        {"ts": 2.0, "metrics": {"m": 9.0}},      # no row: skipped
+    ]
+    series = obs_report.history_series(entries)
+    assert set(series) == {("r", "m")}
+
+
+def test_format_findings_empty_and_filled():
+    assert obs_report.format_findings([]) == ""
+    txt = obs_report.format_findings(detect_all(_ledger([1.0] * 10
+                                                        + [2.0])))
+    assert "r.m" in txt and "drift" in txt
+
+
+# ---------------------------------------------------------------------------
+# HTML report
+# ---------------------------------------------------------------------------
+
+def test_build_html_contents_and_determinism():
+    entries = _ledger([1.0] * 10 + [2.0], row="fig2_bottleneck")
+    results = {"_bench_meta": {"fig2_bottleneck": {
+        "derived": "x=1", "us_per_call": 123.0}}}
+    doc = build_html(entries, results)
+    assert doc.startswith("<!DOCTYPE html>")
+    assert "<svg" in doc and "fig2_bottleneck" in doc
+    assert "abc123" in doc                    # config-hash column
+    assert "flagged series" in doc            # the injected drift
+    assert "#c0392b" in doc                   # flagged point marker
+    assert doc == build_html(entries, results)   # byte-deterministic
+
+
+def test_build_html_clean_ledger_says_so():
+    doc = build_html(_ledger([1.0] * 3))
+    assert "no drift flagged" in doc
+    assert "wall (us/call)" in doc            # wall rendered regardless
+
+
+def test_report_module_is_stdlib_only():
+    """report.py must import (by path) with numpy poisoned — the
+    observatory has to work on a checkout with a broken science stack."""
+    code = (
+        "import importlib.util, sys\n"
+        "sys.modules['numpy'] = None\n"
+        "spec = importlib.util.spec_from_file_location("
+        "'obsreport', sys.argv[1])\n"
+        "m = importlib.util.module_from_spec(spec)\n"
+        "spec.loader.exec_module(m)\n"
+        "assert m.detect_series([1.0]*10 + [2.0])\n"
+        "print('ok')\n")
+    out = subprocess.run(
+        [sys.executable, "-c", code, obs_report.__file__],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == "ok"
+
+
+# ---------------------------------------------------------------------------
+# history.py CLI (the CI gate)
+# ---------------------------------------------------------------------------
+
+def _write_ledger(path, entries):
+    with open(path, "w") as f:
+        for e in entries:
+            f.write(json.dumps(e) + "\n")
+
+
+def test_cli_detect_flags_synthetic_regression(tmp_path, capsys):
+    led = tmp_path / "h.jsonl"
+    _write_ledger(led, _ledger([1.0] * 10 + [2.0]))
+    rc = hist_mod.main(["--detect", "--file", str(led)])
+    assert rc == 1
+    assert "drift" in capsys.readouterr().err
+
+
+def test_cli_detect_clean_exits_zero(tmp_path, capsys):
+    led = tmp_path / "h.jsonl"
+    _write_ledger(led, _ledger([1.0] * 10))
+    assert hist_mod.main(["--detect", "--file", str(led)]) == 0
+    assert "history detect OK" in capsys.readouterr().out
+
+
+def test_cli_detect_clean_on_committed_ledger(capsys):
+    assert hist_mod.main(["--detect"]) == 0
+    assert "history detect OK" in capsys.readouterr().out
+
+
+def test_cli_html_writes_report(tmp_path, capsys):
+    led = tmp_path / "h.jsonl"
+    _write_ledger(led, _ledger([1.0] * 6, row="fig2_bottleneck"))
+    out = tmp_path / "obs.html"
+    rc = hist_mod.main(["--html", str(out), "--file", str(led),
+                        "--results", str(tmp_path / "missing.json")])
+    assert rc == 0
+    doc = out.read_text()
+    assert "<svg" in doc and "fig2_bottleneck" in doc and "abc123" in doc
+
+
+def test_cli_threshold_passthrough(tmp_path):
+    led = tmp_path / "h.jsonl"
+    # modest last step: clean at the default threshold, flagged at 1
+    _write_ledger(led, _ledger([1.0 + 0.01 * (i % 3) for i in range(10)]
+                               + [1.05]))
+    assert hist_mod.main(["--detect", "--file", str(led)]) == 0
+    assert hist_mod.main(["--detect", "--file", str(led),
+                          "--threshold", "1"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: ledger-tooling edge cases
+# ---------------------------------------------------------------------------
+
+def test_sparkline_edges():
+    assert hist_mod.sparkline([]) == ""
+    assert hist_mod.sparkline([5.0]) == hist_mod.BARS[0]
+    assert hist_mod.sparkline([2.0] * 7) == hist_mod.BARS[0] * 7
+    line = hist_mod.sparkline([0.0, 1.0])
+    assert line == hist_mod.BARS[0] + hist_mod.BARS[-1]
+
+
+def test_plot_text_filters(capsys):
+    entries = (_ledger([1.0, 2.0], row="a", metric="x")
+               + _ledger([3.0], row="b", metric="y"))
+    hist_mod.plot_text(entries, row="a")
+    out = capsys.readouterr().out
+    assert "a.x" in out and "b.y" not in out
+    hist_mod.plot_text(entries, metric="y")
+    out = capsys.readouterr().out
+    assert "b.y" in out and "a.x" not in out
+    hist_mod.plot_text(entries, row="nope")
+    assert "no matching" in capsys.readouterr().out
+
+
+def test_load_history_tolerates_torn_tail(tmp_path):
+    led = tmp_path / "h.jsonl"
+    with open(led, "w") as f:
+        f.write(json.dumps(_entry("r", 1.0, {"m": 1.0})) + "\n")
+        f.write('{"row": "r", "ts": 2.0, "metr')      # torn write
+    entries = run_mod.load_history(str(led))
+    assert len(entries) == 1 and entries[0]["row"] == "r"
+
+
+def test_latest_by_row_dedups_to_newest():
+    entries = [_entry("r", 1.0, {"m": 1.0}),
+               _entry("r", 9.0, {"m": 2.0}),
+               _entry("s", 5.0, {"m": 3.0})]
+    latest = run_mod.latest_by_row(entries)
+    assert set(latest) == {"r", "s"}
+    assert latest["r"]["metrics"]["m"] == 2.0

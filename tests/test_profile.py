@@ -1,0 +1,215 @@
+"""The phase profiler: structural zero cost, nesting/attribution,
+>=90% wall coverage on the instrumented hot paths, span integration,
+and the "framework" Perfetto process."""
+
+import numpy as np
+import pytest
+
+from repro.core import NetworkConfig, make_trace
+from repro.core.dse import sweep_all
+from repro.obs import (MetricsRegistry, chrome_trace_events, phase,
+                       profile_report, profiling)
+from repro.obs import profile as profile_mod
+from repro.sim import PacketSim
+
+NET96 = NetworkConfig(bandwidth=96e9 / 8)
+
+
+# ---------------------------------------------------------------------------
+# core mechanics
+# ---------------------------------------------------------------------------
+
+def test_nested_phases_paths_parents_and_self_time():
+    with profiling() as prof:
+        with phase("outer"):
+            with phase("inner"):
+                pass
+            with phase("inner"):
+                pass
+        with phase("outer2"):
+            pass
+    paths = [r.path for r in prof.records]
+    # children close before parents (post-order append)
+    assert paths == ["outer/inner", "outer/inner", "outer", "outer2"]
+    assert [r.depth for r in prof.records] == [1, 1, 0, 0]
+    agg = prof.aggregate()
+    assert agg["outer/inner"]["calls"] == 2
+    assert agg["outer"]["calls"] == 1
+    # self time excludes named children, never negative here
+    assert 0.0 <= agg["outer"]["self_s"] <= agg["outer"]["total_s"]
+    total_inner = agg["outer/inner"]["total_s"]
+    assert agg["outer"]["self_s"] == pytest.approx(
+        agg["outer"]["total_s"] - total_inner)
+
+
+def test_phase_error_outcome_and_unwind():
+    with profiling() as prof:
+        with pytest.raises(RuntimeError):
+            with phase("outer"):
+                with phase("bad"):
+                    raise RuntimeError("boom")
+        with phase("after"):
+            pass
+    by_path = {r.path: r for r in prof.records}
+    assert by_path["outer/bad"].outcome == "error"
+    assert by_path["outer"].outcome == "error"
+    assert by_path["after"].outcome == "ok"
+    assert prof._open == []          # fully unwound
+    assert prof.aggregate()["outer/bad"]["errors"] == 1
+
+
+def test_note_ndarray_peak_propagates_to_parents():
+    a = np.zeros(1000)              # 8000 bytes
+    b = np.zeros(10)
+    with profiling() as prof:
+        with phase("outer"):
+            profile_mod.note_ndarray(b)
+            with phase("inner"):
+                profile_mod.note_ndarray(a, b)
+    by_path = {r.path: r for r in prof.records}
+    assert by_path["outer/inner"].peak_bytes == a.nbytes + b.nbytes
+    # the child's larger peak propagates up
+    assert by_path["outer"].peak_bytes == a.nbytes + b.nbytes
+
+
+def test_phases_outside_profiling_record_nothing():
+    with phase("ignored"):
+        profile_mod.note_ndarray(np.zeros(4))
+    assert profile_mod.active_profiler() is None
+
+
+def test_disabled_profiling_is_structurally_zero_cost(monkeypatch):
+    """With no profiler installed the hot paths must never even
+    construct a PhaseRecord — the SimTrace structural pin, applied to
+    self-profiling."""
+    def boom(*a, **k):
+        raise AssertionError("PhaseRecord built while disabled")
+
+    monkeypatch.setattr(profile_mod, "PhaseRecord", boom)
+    tr = make_trace("zfnet")
+    sweep_all({"zfnet": tr})                      # dse + net.batched
+    PacketSim(tr, NET96).run("greedy")            # sim engine
+    with pytest.raises(AssertionError):
+        with profiling():
+            with phase("x"):
+                pass
+
+
+def test_profiling_does_not_perturb_results():
+    tr = make_trace("zfnet")
+    plain = sweep_all({"zfnet": tr})
+    sim = PacketSim(tr, NET96)
+    t_plain = sim.run("greedy").total_time
+    with profiling():
+        profiled = sweep_all({"zfnet": make_trace("zfnet")})
+        t_prof = PacketSim(make_trace("zfnet"), NET96) \
+            .run("greedy").total_time
+    assert t_prof == t_plain                       # bit-identical
+    for a, b in zip(plain, profiled):
+        assert np.array_equal(a.grid, b.grid)
+
+
+# ---------------------------------------------------------------------------
+# span integration (satellite: exception-safe span)
+# ---------------------------------------------------------------------------
+
+def test_span_opens_a_profiler_phase():
+    reg = MetricsRegistry()
+    with profiling() as prof:
+        with reg.span("work", stage="x"):
+            pass
+    assert [r.path for r in prof.records] == ["work"]
+
+
+def test_span_records_error_outcome_label():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        with reg.span("work", stage="x") as t:
+            raise ValueError("boom")
+    rep = reg.report()["work"]
+    assert len(rep) == 1
+    assert rep[0]["labels"] == {"outcome": "error", "stage": "x"}
+    assert rep[0]["count"] == 1
+    assert t["seconds"] > 0.0                      # sample not dropped
+    # the success path keeps its pre-PR-9 histogram key
+    with reg.span("work", stage="x"):
+        pass
+    labels = [m["labels"] for m in reg.report()["work"]]
+    assert {"stage": "x"} in labels
+
+
+# ---------------------------------------------------------------------------
+# coverage acceptance: >=90% of measured wall attributed to phases
+# ---------------------------------------------------------------------------
+
+def test_coverage_sweep_all():
+    traces = {wl: make_trace(wl) for wl in ("zfnet", "resnet50")}
+    with profiling() as prof:
+        sweep_all(traces)
+    assert prof.coverage() >= 0.9, profile_report(prof)
+
+
+def test_coverage_packetsim_run():
+    tr = make_trace("zfnet")
+    with profiling() as prof:
+        PacketSim(tr, NET96).run("greedy")
+    assert prof.coverage() >= 0.9, profile_report(prof)
+
+
+def test_annealer_phases_count_evaluations():
+    from repro.arch import PlacementProblem, anneal
+    prob = PlacementProblem("zfnet", net=NET96)
+    with profiling() as prof:
+        anneal(prob, steps=20, seed=0)
+    agg = prof.aggregate()
+    anneal_keys = [p for p in agg if p.endswith("arch.anneal")]
+    assert anneal_keys, sorted(agg)
+    evals = [p for p in agg if p.endswith("arch.evaluate")]
+    assert evals
+    # each phase is one *distinct* (memo-miss) evaluation
+    assert agg[evals[0]]["calls"] == prob.evaluations
+
+
+# ---------------------------------------------------------------------------
+# report + export
+# ---------------------------------------------------------------------------
+
+def test_profile_report_table_and_footer():
+    with profiling() as prof:
+        with phase("alpha"):
+            with phase("beta"):
+                profile_mod.note_ndarray(np.zeros(100))
+    txt = profile_report(prof)
+    assert "alpha/beta" in txt
+    assert "attributed" in txt and "% of" in txt
+
+
+def test_perfetto_export_has_distinct_framework_process():
+    tr = make_trace("zfnet")
+    sim = PacketSim(tr, NET96, record=True)
+    res = sim.run("static")
+    with profiling() as prof:
+        PacketSim(tr, NET96).run("static")
+    merged = chrome_trace_events({"sim": res.trace,
+                                  "profile": prof.to_trace()})
+    procs = {e["pid"]: e["args"]["name"]
+             for e in merged["traceEvents"]
+             if e.get("name") == "process_name"}
+    fw_pids = {p for p, n in procs.items() if "framework" in n}
+    sim_pids = {p for p, n in procs.items() if "framework" not in n}
+    assert fw_pids and not fw_pids & sim_pids
+    fw_events = [e for e in merged["traceEvents"]
+                 if e.get("cat") == "framework" and e.get("ph") == "X"]
+    assert fw_events
+    assert all(e["pid"] in fw_pids for e in fw_events)
+    assert all("path" in e["args"] for e in fw_events)
+
+
+def test_to_trace_meta_carries_coverage():
+    with profiling() as prof:
+        with phase("a"):
+            pass
+    st = prof.to_trace()
+    assert st.meta["kind"] == "profile"
+    assert 0.0 < st.meta["coverage"] <= 1.0
+    assert st.meta["wall_s"] == prof.wall_s
