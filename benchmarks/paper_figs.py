@@ -309,6 +309,53 @@ def mapping_sensitivity(traces=None) -> dict:
     return out
 
 
+RESILIENCE_POLICIES = ("static", "adaptive", "online-reshard")
+
+
+def fig_resilience(traces=None) -> dict:
+    """Beyond-paper resilience figure: speedup retained under dynamic
+    conditions — chiplet fail-stops and SNR-degraded channels.
+
+    Per workload (15 paper + 2 LLM phases) and per (k fail-stops x
+    package fade) cell: how much of each policy's fault-free hybrid
+    speedup survives, with the wired-only counterfactual degraded by
+    the same chip events.  The online-reshard row routes through the
+    `repro.fault` controller (heartbeat detection, `ElasticPlan` gate,
+    rate-derated placement rebuild, migration-priced min-anchor); by
+    construction it is never slower than the static or adaptive rows
+    on any cell — ``_summary["reshard_never_slower"]`` asserts it.
+    (``traces`` is unused beyond naming: the sweep re-derives per-era
+    traces itself.)
+    """
+    from repro.core.dse import resilience_sweep_all
+    names = list(traces or WORKLOADS)
+    for wl in CRITPATH_LLM_WORKLOADS:
+        if wl not in names:
+            names.append(wl)
+    res = resilience_sweep_all(names)
+    out = {}
+    cells = []
+    for wl in names:
+        row = res[wl]
+        out[wl] = {cell: {p: d[p]["retained"]
+                          for p in RESILIENCE_POLICIES}
+                   for cell, d in row["cells"].items()}
+        cells.extend(row["cells"].values())
+    out["_summary"] = {
+        "mean_retained": {p: sum(c[p]["retained"] for c in cells)
+                          / len(cells) for p in RESILIENCE_POLICIES},
+        "worst_retained": {p: min(c[p]["retained"] for c in cells)
+                           for p in RESILIENCE_POLICIES},
+        "reshard_never_slower": all(
+            c["online-reshard"]["time"] <= c[p]["time"] * (1 + 1e-9)
+            for c in cells for p in RESILIENCE_POLICIES),
+        "resharded_cells": int(sum(c["online-reshard"]["resharded"]
+                                   for c in cells)),
+        "n_cells": len(cells),
+    }
+    return out
+
+
 def edp_report(traces=None) -> dict:
     """EDP (the GEMINI objective) wired vs hybrid-at-DSE-optimum."""
     from repro.core.dse import sweep

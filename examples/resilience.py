@@ -1,0 +1,96 @@
+"""Resilience walkthrough: dynamic conditions on the hybrid package.
+
+Three acts, mirroring `repro.fault`'s layers:
+
+1. **Inject** — a chiplet fail-stop plus an SNR fade mid-run; compare
+   the wired-only counterfactual, the paper's static filter, and the
+   online-reshard policy under the SAME degraded conditions.
+2. **Explain** — record the faulted run and show where the critical
+   path moved (the dead chip's inflated compute vs the faded wireless
+   channel) relative to the fault-free run.
+3. **Decide** — the `reshard_run` controller prices degraded mode vs
+   a heartbeat-gated placement rebuild, and a retained-speedup
+   mini-grid reproduces one row of the `fig_resilience` benchmark.
+
+    PYTHONPATH=src python examples/resilience.py [workload] [--quick]
+
+``--quick`` trims act 3's grid for CI smoke runs.
+"""
+
+import sys
+
+from repro.core import NetworkConfig, make_trace
+from repro.fault import (ChipFailure, FaultScenario, SnrFade,
+                         default_scenario, reshard_run, resilience_sweep)
+from repro.obs import critical_path, critical_vs_busy
+from repro.sim import PacketSim
+
+
+def inject(workload: str, net: NetworkConfig) -> FaultScenario:
+    tr = make_trace(workload)
+    n = tr.topo.config.n_chiplets
+    sc = FaultScenario(
+        chip_failures=(ChipFailure(n // 2, at_layer=tr.n_layers // 3),),
+        snr_fades=(SnrFade(6.0),))
+    print(f"== inject: {sc.describe()} on {workload} ==")
+    sim0 = PacketSim(tr, net)
+    simf = PacketSim(tr, net, faults=sc)
+    wired0 = sim0.run_wired().total_time
+    wiredf = simf.run_wired().total_time
+    print(f"  wired-only:      {wired0 * 1e3:8.3f} ms fault-free -> "
+          f"{wiredf * 1e3:8.3f} ms faulted")
+    for pol in ("static", "online-reshard"):
+        t0 = sim0.run(pol).total_time
+        tf = simf.run(pol).total_time
+        print(f"  {pol:<15s}  {t0 * 1e3:8.3f} ms fault-free -> "
+              f"{tf * 1e3:8.3f} ms faulted  "
+              f"(retained {(wiredf / tf) / (wired0 / t0):.1%})")
+    return sc
+
+
+def explain(workload: str, net: NetworkConfig,
+            sc: FaultScenario) -> None:
+    print("== explain: critical-path shift under the scenario ==")
+    tr = make_trace(workload)
+    for label, faults in (("fault-free", None), ("faulted", sc)):
+        res = PacketSim(tr, net, record=True,
+                        faults=faults).run("static")
+        cp = critical_path(res.trace)
+        crit = critical_vs_busy(res.trace, cp)["critical"]
+        top = sorted(crit, key=crit.get, reverse=True)[:3]
+        print(f"  {label:<10s} critical share: " + ", ".join(
+            f"{k}={crit[k]:.0%}" for k in top))
+
+
+def decide(workload: str, net: NetworkConfig, quick: bool) -> None:
+    print("== decide: reshard controller + retained-speedup row ==")
+    tr = make_trace(workload)
+    sc = default_scenario(tr, k=1, fade_db=3.0)
+    oc = reshard_run(workload, net, sc)
+    verdict = "reshard" if oc.resharded else "stay degraded"
+    print(f"  degraded {oc.degraded_time * 1e3:.3f} ms vs resharded "
+          f"{oc.resharded_time * 1e3:.3f} ms (migration "
+          f"{oc.migration_time * 1e3:.3f} ms) -> {verdict}")
+    for ev in oc.events:
+        print(f"  recovery event: layer {ev.step} {ev.kind} "
+              f"workers={ev.workers} new_mesh={ev.new_mesh}")
+    ks, fades = ((0, 1), (3.0,)) if quick else ((0, 1, 2), (3.0, 9.0))
+    grid = resilience_sweep([workload], net, ks=ks, fades=fades)
+    for cell, d in grid[workload]["cells"].items():
+        print(f"  {cell:<10s} " + "  ".join(
+            f"{p}={d[p]['retained']:.1%}" for p in d))
+
+
+def main(argv) -> int:
+    quick = "--quick" in argv
+    args = [a for a in argv if not a.startswith("--")]
+    workload = args[0] if args else "zfnet"
+    net = NetworkConfig(bandwidth=96e9 / 8)
+    sc = inject(workload, net)
+    explain(workload, net, sc)
+    decide(workload, net, quick)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

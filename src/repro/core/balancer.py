@@ -122,7 +122,22 @@ def _wl_time(mac, ch_bytes, ch_msgs, ch_active, bw_c, n_reuse):
 
 
 def balance(trace: TrafficTrace,
-            wcfg: WirelessConfig | NetworkConfig) -> BalancerResult:
+            wcfg: WirelessConfig | NetworkConfig,
+            faults=None) -> BalancerResult:
+    """Water-filling balance; ``faults`` re-runs it against the
+    *surviving* topology.
+
+    With a `repro.fault.FaultScenario`, the greedy per-layer loop sees
+    the degraded planes: cut service scaled by ``k/surviving`` (``inf``
+    on dead cuts, so everything eligible drains to wireless), and
+    per-(layer, channel) effective bandwidth under the SNR fades.
+    Chip events act on the trace, not the network — pass a
+    `derate_trace`d trace (the engine does this automatically for
+    `OraclePolicy`/`OnlineReshardPolicy`).  The grid-anchor stitch and
+    the returned `sim` timing fields stay fault-free projections: under
+    faults the product is the ``injected`` mask (a candidate the
+    fault-aware engine re-stitches exactly).
+    """
     net = as_network(wcfg)
     plan, mac = net.channels, net.mac
     n_ch = plan.n_channels
@@ -143,6 +158,18 @@ def balance(trace: TrafficTrace,
     cut_mat, cut_bw = trace.cut_matrix()
     eligible = eligibility(trace, threshold=1)  # balancer sees everything
     loads = trace.baseline_link_loads()
+
+    # degraded planes under a fault scenario (None entries = fault-free)
+    cut_scale = bw_mat = None
+    if faults is not None and not faults.is_null:
+        from repro.fault.apply import (link_fault_arrays,  # no cycle
+                                       wireless_bw_matrix)
+        link_bw = trace.topo.config.nop_bw_per_side
+        cut_scale, _, _, _ = link_fault_arrays(
+            trace, faults, cut_of_link=cut_mat.argmax(axis=1),
+            k_par=np.rint(cut_bw / link_bw).astype(int),
+            n_cuts=cut_mat.shape[1])
+        bw_mat = wireless_bw_matrix(trace, net, faults)
 
     # per-packet link lists from the sparse incidence
     order = np.argsort(trace.inc_msg, kind="stable")
@@ -165,13 +192,16 @@ def balance(trace: TrafficTrace,
         ch_srcs = [[set() for _ in range(n_zc)] for _ in range(n_ch)]
         ch_active = np.zeros((n_ch, n_zc))
         remaining = list(cand)
+        bw_li = bw_c if bw_mat is None else bw_mat[li][:, None]
+        scale_li = 1.0 if cut_scale is None else cut_scale[li]
         state_changed = True
         while remaining:
             if state_changed:  # rejections leave the planes untouched
                 cut_loads = layer_loads @ cut_mat
-                hot = int((cut_loads / cut_bw).argmax())
-                t_nop = cut_loads[hot] / cut_bw[hot]
-                t_wl = _wl_time(mac, ch_bytes, ch_msgs, ch_active, bw_c, Z)
+                cut_t = cut_loads / cut_bw * scale_li
+                hot = int(cut_t.argmax())
+                t_nop = cut_t[hot]
+                t_wl = _wl_time(mac, ch_bytes, ch_msgs, ch_active, bw_li, Z)
                 if t_nop <= t_wl or t_nop <= t_rest[li]:
                     break  # balanced, or another element already dominates
                 hot_links = np.nonzero(cut_mat[:, hot])[0]
@@ -194,7 +224,9 @@ def balance(trace: TrafficTrace,
             row_b[zc] += trace.nbytes[mi]
             row_m[zc] += 1
             row_a[zc] = len(ch_srcs[ch][zc] | {int(trace.src[mi])})
-            t_row = mac_times(mac, row_b, row_m, row_a, bw_c)
+            t_row = mac_times(mac, row_b, row_m, row_a,
+                              bw_c if bw_mat is None
+                              else float(bw_mat[li, ch]))
             new_t_ch = float(t_row[0] if n_zc == 1
                              else t_row[Z] + t_row[:Z].max())
             # accept only if the wireless plane stays the earlier

@@ -421,6 +421,33 @@ def policy_sweep_all(traces: Dict[str, TrafficTrace],
     return out
 
 
+def resilience_sweep_all(workloads, net: NetworkConfig | None = None,
+                         ks=(0, 1, 2), fades=(3.0, 9.0),
+                         policies=("static", "adaptive",
+                                   "online-reshard")) -> Dict:
+    """Provenance-stamped retained-speedup grid (`repro.fault`).
+
+    Cells are (k fail-stops) x (package fade dB); each runs every
+    policy against the same scenario, with the online-reshard row
+    routed through the era-rebuild controller.  The returned dict is
+    `repro.fault.resilience.resilience_sweep`'s, plus a
+    ``"provenance"`` entry.
+    """
+    from repro.fault import resilience_sweep   # late: fault imports sim
+    net = net or NetworkConfig(bandwidth=gbps_to_bytes_per_s(96))
+    with DEFAULT_REGISTRY.span("dse.resilience_sweep_all") as t:
+        out = resilience_sweep(workloads, net, ks=tuple(ks),
+                               fades=tuple(fades),
+                               policies=tuple(policies))
+    out["provenance"] = make_provenance(
+        "dse.resilience_sweep_all",
+        {"workloads": list(workloads), "ks": list(ks),
+         "fades": list(fades), "policies": list(policies), "net": net},
+        points=len(out) * len(ks) * len(fades) * len(policies),
+        wall_s=t["seconds"])
+    return out
+
+
 # ---------------------------------------------------------------------------
 # the scale-out frontier: large meshes x spatial channel reuse
 # ---------------------------------------------------------------------------

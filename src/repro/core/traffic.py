@@ -95,6 +95,14 @@ class TrafficTrace:
     macs_per_chiplet: np.ndarray | None = None
     noc_bytes_per_chiplet: np.ndarray | None = None
 
+    # per-layer execution metadata, for the dynamic-conditions plane
+    # (`repro.fault`): which chiplets run each layer, with what shares,
+    # and the layer's weight footprint (re-streamed on degraded-mode
+    # absorption / reshard migration).  `None` on hand-built traces.
+    exec_chips: list | None = None        # per-layer tuple of chiplet ids
+    exec_shares: list | None = None       # per-layer share vector
+    weight_bytes: np.ndarray | None = None  # (L,) weight footprint
+
     @property
     def n_links(self) -> int:
         return len(self.link_index)
@@ -369,4 +377,8 @@ def build_trace(layers: List[Layer], mapping: Mapping,
         total_macs=float(sum(lyr.macs for lyr in layers)),
         noc_bytes=float(sum(lyr.act_in + lyr.act_out for lyr in layers)),
         macs_per_chiplet=macs_pc, noc_bytes_per_chiplet=nocb_pc,
+        exec_chips=[tuple(mapping.chiplets[i]) for i in range(n_layers)],
+        exec_shares=[np.asarray(mapping.shares[i], float)
+                     for i in range(n_layers)],
+        weight_bytes=np.asarray([lyr.weights for lyr in layers], float),
     )

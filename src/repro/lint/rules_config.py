@@ -17,7 +17,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 from .base import Finding, ModuleContext, Rule
 from .registry import PROVENANCE_FIELD_NAMES, UNVALIDATED_CONFIGS
 
-_CONFIG_SUFFIXES = ("Config", "Spec", "Plan")
+_CONFIG_SUFFIXES = ("Config", "Spec", "Plan", "Scenario", "Profile")
 _EXPORTS_NAME_RE = re.compile(r"^_[A-Z0-9_]*EXPORTS$")
 
 
@@ -35,9 +35,10 @@ def _is_dataclass(node: ast.ClassDef) -> bool:
 class UnvalidatedDataclassRule(Rule):
     name = "cfg-unvalidated-dataclass"
     family = "config"
-    description = ("public `*Config`/`*Spec`/`*Plan` dataclass without "
-                   "`__post_init__` validation and not registered as "
-                   "intentionally unvalidated")
+    description = ("public `*Config`/`*Spec`/`*Plan`/`*Scenario`/"
+                   "`*Profile` dataclass without `__post_init__` "
+                   "validation and not registered as intentionally "
+                   "unvalidated")
 
     def check(self, ctx: ModuleContext) -> Iterator[Finding]:
         for node in ast.walk(ctx.tree):

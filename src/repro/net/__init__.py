@@ -28,14 +28,15 @@ operates on plain arrays), so `core.simulator` can import it without
 cycles.
 """
 
-from .channel import ChannelPlan
+from .channel import ChannelPlan, SnrProfile, shannon_capacity
 from .config import NetworkConfig, as_network
 from .mac import MAC_PROTOCOLS, MacConfig, mac_extra_bytes, mac_times
 from .stack import network_layer_times
 from .batched import BatchedDesignSpace, GridSpec, GridResult
 
 __all__ = [
-    "ChannelPlan", "MacConfig", "NetworkConfig", "as_network",
+    "ChannelPlan", "SnrProfile", "shannon_capacity",
+    "MacConfig", "NetworkConfig", "as_network",
     "MAC_PROTOCOLS", "mac_times", "mac_extra_bytes",
     "network_layer_times",
     "BatchedDesignSpace", "GridSpec", "GridResult",

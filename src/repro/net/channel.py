@@ -150,3 +150,101 @@ class ChannelPlan:
         if self.reuse_zones > 1:
             s += f"-x{self.reuse_zones}reuse"
         return s
+
+
+# ---------------------------------------------------------------------------
+# SNR / fading -> effective capacity (the dynamic-conditions plane)
+# ---------------------------------------------------------------------------
+
+def shannon_capacity(snr_db) -> np.ndarray:
+    """Normalized Shannon capacity ``log2(1 + SNR)`` in bit/s/Hz."""
+    snr_db = np.asarray(snr_db, dtype=np.float64)
+    return np.log2(1.0 + 10.0 ** (snr_db / 10.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class SnrProfile:
+    """Distance + degradation -> effective wireless rate, Shannon-style.
+
+    The package has no physical scale of its own (the topology is a unit
+    grid), so the profile carries it: ``pitch_mm`` converts grid hops to
+    millimetres.  The link budget is a log-distance model around a
+    reference point: a transmission spanning distance ``d`` sees
+
+        ``snr_db(d) = ref_snr_db - 10 * path_loss_exp * log10(d / ref)``
+
+    (clamped at the reference for shorter spans — the budget is set by
+    the worst-case in-package reach, shorter hops don't beat it), and a
+    fading event of ``fading_db`` lowers that SNR directly.  The
+    *capacity scale* is the ratio of faded to clear Shannon capacity,
+
+        ``C(snr - fade) / C(snr)``  with  ``C(s) = log2(1 + 10^(s/10))``,
+
+    so zero fading is exactly 1.0 (the differential pin relies on this)
+    and the same dB of fading costs more capacity on a longer, lower-SNR
+    span — the AIMC-paper observation that wireless value tracks
+    *sustained effective* bandwidth, not nominal Gb/s.
+    """
+
+    ref_snr_db: float = 15.0       # link budget at the reference span
+    ref_distance_mm: float = 10.0  # span the budget is quoted at
+    path_loss_exp: float = 2.0     # in-package log-distance exponent
+    pitch_mm: float = 10.0         # chiplet pitch: one grid hop in mm
+
+    def __post_init__(self):
+        if self.ref_snr_db <= 0:
+            raise ValueError(f"ref_snr_db must be > 0, got {self.ref_snr_db}")
+        if self.ref_distance_mm <= 0 or self.pitch_mm <= 0:
+            raise ValueError("ref_distance_mm and pitch_mm must be > 0")
+        if self.path_loss_exp < 1.0:
+            raise ValueError(
+                f"path_loss_exp must be >= 1, got {self.path_loss_exp}")
+
+    def snr_db_at(self, distance_mm) -> np.ndarray:
+        """Clear-channel SNR (dB) at physical span ``distance_mm``."""
+        d = np.maximum(np.asarray(distance_mm, np.float64),
+                       self.ref_distance_mm)
+        return (self.ref_snr_db
+                - 10.0 * self.path_loss_exp
+                * np.log10(d / self.ref_distance_mm))
+
+    def capacity_scale(self, distance_mm, fading_db) -> np.ndarray:
+        """Fraction of nominal capacity surviving ``fading_db`` at span
+        ``distance_mm`` — exactly 1.0 when the fade is 0 dB."""
+        fade = np.asarray(fading_db, np.float64)
+        if np.any(fade < 0) or not np.all(np.isfinite(fade)):
+            raise ValueError("fading_db must be finite and >= 0")
+        snr = self.snr_db_at(distance_mm)
+        scale = np.where(fade == 0.0, 1.0,
+                         shannon_capacity(snr - fade)
+                         / shannon_capacity(snr))
+        return scale
+
+    def channel_distances(self, plan: ChannelPlan, n_nodes: int,
+                          coords: np.ndarray) -> np.ndarray:
+        """Worst-case physical span (mm) served by each frequency
+        channel: the Manhattan diameter of the channel's member set vs
+        the whole package (a transmission must reach every listener),
+        scaled by the pitch."""
+        coords = np.asarray(coords, np.float64)
+        ch = plan.assign(n_nodes)
+        dist = np.zeros(plan.n_channels, np.float64)
+        lo, hi = coords.min(axis=0), coords.max(axis=0)
+        for c in range(plan.n_channels):
+            m = coords[ch == c]
+            if len(m) == 0:
+                dist[c] = self.ref_distance_mm
+                continue
+            # member must reach the farthest package corner it talks to
+            span = np.maximum(hi - m.min(axis=0), m.max(axis=0) - lo)
+            dist[c] = max(float(span.sum()), 1.0) * self.pitch_mm
+        return dist
+
+    def effective_bandwidth(self, plan: ChannelPlan, aggregate_bw: float,
+                            n_nodes: int, coords: np.ndarray,
+                            fading_db) -> np.ndarray:
+        """Per-channel effective rate (B/s) under ``fading_db`` (scalar
+        or per-channel array)."""
+        bw_c = plan.channel_bandwidth(aggregate_bw)
+        dist = self.channel_distances(plan, n_nodes, coords)
+        return bw_c * self.capacity_scale(dist, fading_db)

@@ -75,8 +75,9 @@ def channel_aggregates(n_layers: int, layer: np.ndarray, nbytes: np.ndarray,
 def network_layer_times(n_layers: int, layer: np.ndarray, nbytes: np.ndarray,
                         src: np.ndarray, n_nodes: int, injected: np.ndarray,
                         net: NetworkConfig, *, grid=None, node_coords=None,
-                        max_hops=None) -> Tuple[np.ndarray, np.ndarray,
-                                                float]:
+                        max_hops=None,
+                        channel_bw=None) -> Tuple[np.ndarray, np.ndarray,
+                                                  float]:
     """Per-layer wireless times under ``net``.
 
     Returns ``(t_wireless (L,), wl_bytes_per_layer (L,), extra_bytes)``
@@ -84,10 +85,17 @@ def network_layer_times(n_layers: int, layer: np.ndarray, nbytes: np.ndarray,
     for the energy model.  A spatial-reuse plan additionally needs the
     package geometry: ``grid`` (rows, cols), ``node_coords`` (the
     (n_nodes, 2) clamped grid positions) and per-packet ``max_hops``.
+
+    ``channel_bw`` overrides the plan's nominal per-channel rate with a
+    ``(n_layers, n_channels)`` effective-bandwidth matrix — the dynamic
+    SNR/fading path (`repro.fault.apply.wireless_bw_matrix`); the
+    default None keeps the nominal scalar rate.
     """
     plan = net.channels
     ch_of_node = plan.assign(n_nodes)
     bw_c = plan.channel_bandwidth(net.bandwidth)
+    if channel_bw is not None:
+        bw_c = np.asarray(channel_bw, float)   # (L, C), broadcast below
     if plan.reuse_zones == 1:
         # single interference domain per channel: the exact legacy path
         bytes_lc, msgs_lc, active_lc = channel_aggregates(

@@ -54,6 +54,12 @@ class Heartbeat:
         return sorted(w for w, s in self.last_seen.items()
                       if t - s <= self.timeout_s)
 
+    def evict(self, worker: int) -> None:
+        """Forget a worker the coordinator has acted on.  Without this,
+        `dead()` re-reports the same failed worker on every poll and the
+        restart policy re-fires forever."""
+        self.last_seen.pop(worker, None)
+
 
 @dataclasses.dataclass(frozen=True)
 class ElasticPlan:
@@ -65,11 +71,18 @@ class ElasticPlan:
     def plan(n_alive_chips: int, model_parallel: int,
              pods: int = 1) -> "ElasticPlan":
         """Largest power-of-two data axis that fits the survivors; the
-        model axis is preserved (TP weights are not re-shardable in-run)."""
+        model axis is preserved (TP weights are not re-shardable in-run).
+        The pod axis IS shrinkable (pods are replicas): it participates
+        in the feasibility check and is reduced before giving up, so the
+        plan never claims more workers than there are alive chips."""
+        if model_parallel < 1 or pods < 1:
+            raise ValueError("model_parallel and pods must be >= 1")
         if n_alive_chips < model_parallel:
             raise RuntimeError(
                 f"cannot keep model_parallel={model_parallel} with only "
                 f"{n_alive_chips} chips")
+        while pods > 1 and pods * model_parallel > n_alive_chips:
+            pods -= 1
         data = 1
         while data * 2 * model_parallel * pods <= n_alive_chips:
             data *= 2
@@ -117,14 +130,23 @@ def run_with_recovery(step_fn: Callable, state, n_steps: int,
                       save_fn: Callable[[dict, int], None],
                       restore_fn: Callable[[], Tuple[dict, int]],
                       checkpoint_every: int = 10,
-                      failure_injector: Optional[Callable[[int], bool]] = None
+                      failure_injector: Optional[Callable[[int], bool]] = None,
+                      max_restarts: int = 25,
                       ) -> Tuple[dict, List[RecoveryEvent], list]:
     """Driver loop with checkpoint/restart.  `failure_injector(step)` lets
     tests kill the run deterministically; production wires it to the
-    heartbeat registry."""
+    heartbeat registry.
+
+    Restores rewind `step` to the latest checkpoint, so any metrics
+    recorded past that point are rolled back too (replayed steps would
+    otherwise append duplicates); on success ``len(metrics_log) ==
+    n_steps`` exactly.  `max_restarts` bounds the retry loop: a
+    deterministic injector that fires again at the restored step would
+    otherwise spin forever."""
     events: List[RecoveryEvent] = []
     metrics_log = []
     step = 0
+    restarts = 0
     while step < n_steps:
         try:
             if failure_injector is not None and failure_injector(step):
@@ -135,6 +157,17 @@ def run_with_recovery(step_fn: Callable, state, n_steps: int,
             if step % checkpoint_every == 0:
                 save_fn(state, step)
         except RuntimeError:
+            restarts += 1
+            if restarts > max_restarts:
+                raise RuntimeError(
+                    f"run_with_recovery: exceeded max_restarts="
+                    f"{max_restarts} at step {step}; the failure keeps "
+                    f"recurring at the restored step (deterministic "
+                    f"injector or persistently bad worker) — evict the "
+                    f"worker or raise max_restarts")
             state, step = restore_fn()
+            # roll the metrics log back with the state: entries for steps
+            # >= the restore point are about to be replayed
+            del metrics_log[step:]
             events.append(RecoveryEvent(step, "failure", [], ()))
     return state, events, metrics_log

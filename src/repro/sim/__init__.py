@@ -29,7 +29,8 @@ from .compare import fidelity_report, policy_report
 from .engine import (DRAM_MODELS, LINK_MODELS, EventResult, PacketSim,
                      simulate_events)
 from .policies import (POLICIES, AdaptivePolicy, FixedPolicy, GreedyPolicy,
-                       OraclePolicy, Policy, StaticPolicy, get_policy)
+                       OnlineReshardPolicy, OraclePolicy, Policy,
+                       StaticPolicy, get_policy)
 
 __all__ = [
     "ResourcePool", "first_occurrence", "segment_cumsum",
@@ -37,5 +38,5 @@ __all__ = [
     "DRAM_MODELS", "LINK_MODELS", "EventResult", "PacketSim",
     "simulate_events",
     "POLICIES", "Policy", "StaticPolicy", "OraclePolicy", "GreedyPolicy",
-    "AdaptivePolicy", "FixedPolicy", "get_policy",
+    "AdaptivePolicy", "OnlineReshardPolicy", "FixedPolicy", "get_policy",
 ]

@@ -119,11 +119,23 @@ class PacketSim:
 
     def __init__(self, trace: TrafficTrace, net, *,
                  link_model: str = "striped", dram_model: str = "pooled",
-                 record: bool = False):
+                 record: bool = False, faults=None):
         if link_model not in LINK_MODELS:
             raise ValueError(f"link_model must be one of {LINK_MODELS}")
         if dram_model not in DRAM_MODELS:
             raise ValueError(f"dram_model must be one of {DRAM_MODELS}")
+        self.faults = None
+        if faults is not None and not faults.is_null:
+            if link_model == "adaptive":
+                raise NotImplementedError(
+                    "faults are not supported with the 'adaptive' link "
+                    "model: its per-slot backlog routing has no exact "
+                    "per-layer degraded projection; use 'striped' or 'xy'")
+            # chip events derate the trace itself (compute/DRAM terms);
+            # late import: repro.fault.resilience imports this module
+            from repro.fault.apply import derate_trace
+            trace = derate_trace(trace, faults)
+            self.faults = faults
         self.trace = trace
         self.net = as_network(net)
         self.link_model = link_model
@@ -199,6 +211,21 @@ class PacketSim:
         self._elig_cache: Dict[int, np.ndarray] = {1: self.eligible}
         self._wired_cache: Optional[EventResult] = None
 
+        # dynamic conditions (repro.fault): per-(layer, cut) wired
+        # service scaling + forced wireless failover for link failures,
+        # per-(layer, channel) effective bandwidth for SNR fades.  All
+        # None on fault-free runs — every hot path tests for None only.
+        self._cut_scale = self._link_remap = self._link_cost = None
+        self._forced = self._wl_bw = None
+        if self.faults is not None:
+            from repro.fault.apply import (link_fault_arrays,
+                                           wireless_bw_matrix)
+            (self._cut_scale, self._link_remap, self._link_cost,
+             self._forced) = link_fault_arrays(
+                trace, self.faults, cut_of_link=self.cut_of_link,
+                k_par=self.k_par, n_cuts=self.n_cuts)
+            self._wl_bw = wireless_bw_matrix(trace, self.net, self.faults)
+
     # ------------------------------------------------------------------
     # shared pieces
     # ------------------------------------------------------------------
@@ -226,7 +253,9 @@ class PacketSim:
         a_now = np.empty(len(idx))
         pairs = grp[order] * tr.topo.n_nodes + tr.src[idx][order]
         a_now[order] = segment_cumsum(first_occurrence(pairs), grp[order])
-        svc = mac_packet_times(mac, v, a_now, self.bw_c)
+        bw = (self.bw_c if self._wl_bw is None
+              else self._wl_bw[tr.layer[idx], self.pkt_ch[idx]])
+        svc = mac_packet_times(mac, v, a_now, bw)
         extra = mac_packet_extra_bytes(mac, v, a_now)
         return idx, grp, np.asarray(svc, float), float(np.sum(extra))
 
@@ -336,9 +365,13 @@ class PacketSim:
         # projection it uses the striped (idealized) wired plane below
         if self.link_model != "xy":
             keep = ~mask[self._x_pkt]
+            w = self._x_add[keep]
+            if self._cut_scale is not None:   # degraded stripes / dead cuts
+                w = w * self._cut_scale[tr.layer[self._x_pkt[keep]],
+                                        self._x_cut[keep]]
             seg = tr.layer[self._x_pkt[keep]].astype(np.int64) * self.n_cuts \
                 + self._x_cut[keep]
-            busy = np.bincount(seg, weights=self._x_add[keep],
+            busy = np.bincount(seg, weights=w,
                                minlength=L * self.n_cuts) \
                 .reshape(L, self.n_cuts)
             # a trace can have no mesh resources at all (single-column
@@ -349,10 +382,14 @@ class PacketSim:
         else:  # "xy": fixed dimension-ordered links
             epk = tr.inc_msg
             keep = ~mask[epk]
-            seg = tr.layer[epk[keep]].astype(np.int64) * tr.n_links \
-                + tr.inc_link[keep]
-            busy = np.bincount(seg, weights=tr.nbytes[epk[keep]]
-                               / self.link_bw,
+            lnk = tr.inc_link[keep]
+            lay = tr.layer[epk[keep]].astype(np.int64)
+            w = tr.nbytes[epk[keep]] / self.link_bw
+            if self._link_remap is not None:  # detours off dead links
+                w = w * self._link_cost[lay, lnk]
+                lnk = self._link_remap[lay, lnk]
+            seg = lay * tr.n_links + lnk
+            busy = np.bincount(seg, weights=w,
                                minlength=L * tr.n_links) \
                 .reshape(L, tr.n_links)
             t_nop = busy.max(axis=1) if busy.size else np.zeros(L)
@@ -378,20 +415,37 @@ class PacketSim:
                   link_busy)
         return t_nop, t_wl, self._dram_terms(busy_ld), extra, busies
 
+    def _with_forced(self, mask: np.ndarray) -> np.ndarray:
+        """OR the forced-failover set (dead-cut packets) into a mask.
+
+        The runtime knows its dead routes and diverts their packets to
+        the wireless plane regardless of the paper's eligibility
+        criteria — every policy's executed mask includes them.  Only
+        `run_wired` skips this: the wired-only counterfactual pays the
+        infinity instead (the wireless-as-failover headline).
+        """
+        if self._forced is None:
+            return mask
+        return mask | self._forced
+
     def layer_times(self, mask: np.ndarray) -> np.ndarray:
         """Per-layer event times a fixed injection set would produce.
 
         Exact for the batched link models; the ``adaptive`` model uses
         the striped projection (policies plan on the idealized wired
-        plane, the event run resolves the real one).
+        plane, the event run resolves the real one).  Forced-failover
+        packets are included, so policy projections match execution.
         """
-        t_nop, t_wl, t_dram, _, _ = self._planned_parts(mask)
+        t_nop, t_wl, t_dram, _, _ = self._planned_parts(
+            self._with_forced(mask))
         return np.maximum.reduce(
             [self.trace.t_compute, t_dram, self.trace.t_noc, t_nop, t_wl])
 
     def _run_planned(self, mask: np.ndarray, name: str,
-                     st=None) -> EventResult:
+                     st=None, force: bool = True) -> EventResult:
         with obs_profile.phase("sim.planned"):
+            if force:
+                mask = self._with_forced(mask)
             with obs_profile.phase("sim.planned_parts"):
                 t_nop, t_wl, t_dram, extra, busies = \
                     self._planned_parts(mask)
@@ -593,18 +647,26 @@ class PacketSim:
                     ids = self._pk_links[self._pk_starts[p]:
                                          self._pk_starts[p + 1]]
                     svc = np.full(len(ids), v / self.link_bw)
+                    if self._link_remap is not None:
+                        svc = svc * self._link_cost[li, ids]
+                        ids = self._link_remap[li, ids]
                     proj_w = wired_pool.peek(ids, svc) if len(ids) else 0.0
                 else:
                     xs = slice(self._x_starts[p], self._x_starts[p + 1])
                     ids, svc = self._x_cut[xs], self._x_add[xs]
+                    if self._cut_scale is not None:
+                        svc = svc * self._cut_scale[li, ids]
                     proj_w = wired_pool.peek(ids, svc) if len(ids) else 0.0
                 # --- wireless projection + decision ---
                 go = False
-                if self.eligible[p]:
+                if self.eligible[p] or (self._forced is not None
+                                        and self._forced[p]):
                     ch = int(self.pkt_ch[p])
                     zc = int(self.pkt_zc[p])
                     a_now = len(ch_srcs[ch][zc] | {int(tr.src[p])})
-                    s_wl = float(mac_packet_times(mac, v, a_now, self.bw_c))
+                    bw_li = (self.bw_c if self._wl_bw is None
+                             else float(self._wl_bw[li, ch]))
+                    s_wl = float(mac_packet_times(mac, v, a_now, bw_li))
                     if zc >= self.n_zones:
                         # global transmission: quiesces every zone of its
                         # channel — starts when all are free, blocks all
@@ -731,12 +793,18 @@ class PacketSim:
         return self._run_online(pol, None, pol.name, st)
 
     def run_wired(self) -> EventResult:
-        """All-wired baseline (the speedup denominator), cached."""
+        """All-wired baseline (the speedup denominator), cached.
+
+        Under faults this is the wired-only counterfactual: forced
+        failover does NOT apply, so a fully-dead cut costs infinity —
+        the wired-only platform simply cannot finish.
+        """
         if self._wired_cache is None:
             mask = np.zeros(len(self.trace.nbytes), bool)
             st = self._recorder("wired")
             if self.link_model != "adaptive":
-                self._wired_cache = self._run_planned(mask, "wired", st)
+                self._wired_cache = self._run_planned(mask, "wired", st,
+                                                      force=False)
             else:
                 self._wired_cache = self._run_online(None, mask, "wired", st)
         return self._wired_cache

@@ -26,6 +26,11 @@ plane does this packet take?* — at one of three information levels:
   its total is ``sum_l min_c t_l(c) <= min_c sum_l t_l(c)``: it
   provably matches or beats EVERY fixed grid point of the paper's
   sweep, on every workload.
+- `OnlineReshardPolicy` — the traffic half of `repro.fault`'s
+  online-reshard controller: the adaptive candidate pool plus the
+  deployed static filter and the fault-aware water-filling balancer,
+  stitched under the engine's (degraded) projections — never slower
+  than static or adaptive under any injected failure set.
 - `FixedPolicy` — replay an explicit per-packet mask (golden tests,
   external schedules).
 """
@@ -92,7 +97,7 @@ class OraclePolicy(Policy):
 
     def plan_trace(self, sim) -> np.ndarray:
         from repro.core.balancer import balance   # late: core imports sim
-        return balance(sim.trace, sim.net).injected
+        return balance(sim.trace, sim.net, faults=sim.faults).injected
 
 
 class GreedyPolicy(Policy):
@@ -128,17 +133,20 @@ class AdaptivePolicy(Policy):
         self.injections = tuple(injections)
         self.include_greedy = include_greedy
 
+    def candidates(self, sim) -> list:
+        """Per-layer candidate masks (subclasses extend the pool)."""
+        hash_ = injection_hash(len(sim.trace.nbytes))
+        cands = [sim.elig(t) & (hash_ < p)
+                 for t in self.thresholds for p in self.injections]
+        if self.include_greedy:
+            cands.append(sim.run(GreedyPolicy()).injected)
+        return cands
+
     def plan_trace(self, sim) -> np.ndarray:
         tr = sim.trace
-        M = len(tr.nbytes)
-        hash_ = injection_hash(M)
         best_t = np.full(tr.n_layers, np.inf)
-        best_mask = np.zeros(M, bool)
-        candidates = [sim.elig(t) & (hash_ < p)
-                      for t in self.thresholds for p in self.injections]
-        if self.include_greedy:
-            candidates.append(sim.run(GreedyPolicy()).injected)
-        for mask in candidates:
+        best_mask = np.zeros(len(tr.nbytes), bool)
+        for mask in self.candidates(sim):
             t = sim.layer_times(mask)
             win = t < best_t - 1e-15
             if win.any():
@@ -148,8 +156,44 @@ class AdaptivePolicy(Policy):
         return best_mask
 
 
+class OnlineReshardPolicy(AdaptivePolicy):
+    """Traffic half of the online-reshard controller (`repro.fault`).
+
+    Extends the adaptive per-layer re-tune with two extra candidates:
+    the network's own deployed static filter (so the stitched plan
+    dominates `StaticPolicy` even when the configured (threshold, p)
+    pair sits outside the paper grid), and the offline water-filling
+    balancer re-run against the *surviving* topology (fault-aware
+    `repro.core.balancer.balance`).  The per-layer stitch uses the
+    engine's fault-aware projections, which are exact for the batched
+    link models, so the total is <= every candidate's total under any
+    injected failure set — the property test's guarantee.  The
+    *placement* half (Heartbeat/ElasticPlan-gated trace rebuild on the
+    survivors) lives in `repro.fault.resilience.reshard_run`, which
+    min-anchors against this policy's no-reshard projection.
+    """
+
+    name = "online-reshard"
+
+    def __init__(self, thresholds=PAPER_THRESHOLDS,
+                 injections=PAPER_INJECTIONS, include_greedy: bool = True,
+                 include_balancer: bool = True):
+        super().__init__(thresholds, injections, include_greedy)
+        self.include_balancer = include_balancer
+
+    def candidates(self, sim) -> list:
+        cands = super().candidates(sim)
+        cands.append(StaticPolicy().plan_trace(sim))
+        if self.include_balancer:
+            from repro.core.balancer import balance  # late: core imports sim
+            cands.append(balance(sim.trace, sim.net,
+                                 faults=sim.faults).injected)
+        return cands
+
+
 POLICIES = {cls.name: cls for cls in
-            (StaticPolicy, OraclePolicy, GreedyPolicy, AdaptivePolicy)}
+            (StaticPolicy, OraclePolicy, GreedyPolicy, AdaptivePolicy,
+             OnlineReshardPolicy)}
 
 
 def get_policy(policy) -> Policy:

@@ -1,0 +1,322 @@
+"""The dynamic-conditions resilience plane (repro.fault).
+
+Covers the PR's acceptance properties:
+
+- a golden hand-computed 2-chiplet / 2-layer trace with a mid-run mesh
+  link failure: the victim packet is force-failed-over to the wireless
+  plane at exactly its hand-derived service time, while the wired-only
+  counterfactual pays an infinite cut;
+- golden chip fail-stop / slow-down derating numbers on the same trace
+  (share absorption, weight-restream DRAM term, emergency absorber);
+- the zero-degradation differential pin: a scenario of zero-magnitude
+  events (slow-down factor 1.0, 0 dB fade) is BIT-IDENTICAL to the
+  fault-free run on every paper workload;
+- the online-reshard property: under seeded random fault scenarios the
+  online-reshard policy is never slower than static or adaptive, and
+  the reshard controller never ships worse than degraded mode;
+- the SNR/fading channel model's closed forms, scenario validation,
+  and the adaptive-link-model refusal.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import AcceleratorConfig, NetworkConfig, build_topology, \
+    make_trace
+from repro.core.traffic import TrafficTrace
+from repro.core.workloads import WORKLOADS
+from repro.fault import (ChipFailure, ChipSlowdown, FaultScenario,
+                         LinkFailure, SnrFade, default_scenario,
+                         derate_trace, reshard_run)
+from repro.net.channel import SnrProfile, shannon_capacity
+from repro.sim import FixedPolicy, PacketSim
+
+NET96 = NetworkConfig(bandwidth=96e9 / 8)
+
+
+# ---------------------------------------------------------------------------
+# golden trace: 2 chiplets, 2 layers, mid-run link failure, done by hand
+# ---------------------------------------------------------------------------
+
+def _golden_trace(with_exec: bool = False) -> TrafficTrace:
+    """Two chiplets side by side, the same traffic in each of 2 layers.
+
+    Per layer: one 4 MB eligible multicast chiplet0 -> chiplet1 on
+    link 0 (1 ms at the 4 GB/s link rate) and one 2 MB ineligible
+    unicast chiplet1 -> chiplet0 on link 1 (0.5 ms).  Compute floor
+    1 ms per layer; DRAM and NoC free.  ``with_exec`` attaches the
+    exec-set metadata chip faults need: both chips split every layer
+    50/50, layer 1 holds 8 MB of weights.
+    """
+    topo = build_topology(AcceleratorConfig(grid=(1, 2), n_dram=1))
+    extra = {}
+    if with_exec:
+        extra = dict(exec_chips=[(0, 1), (0, 1)],
+                     exec_shares=[np.array([0.5, 0.5])] * 2,
+                     weight_bytes=np.array([0.0, 8e6]))
+    return TrafficTrace(
+        topo=topo, n_layers=2,
+        link_index={((0, 0), (0, 1)): 0, ((0, 1), (0, 0)): 1},
+        layer=np.array([0, 0, 1, 1], np.int32),
+        nbytes=np.array([4e6, 2e6, 4e6, 2e6]),
+        src=np.array([0, 1, 0, 1], np.int32),
+        is_multicast=np.array([True, False, True, False]),
+        is_multichip=np.array([True, True, True, True]),
+        max_hops=np.array([1, 1, 1, 1], np.int32),
+        dram_node=np.array([-1, -1, -1, -1], np.int32),
+        inc_msg=np.array([0, 1, 2, 3], np.int32),
+        inc_link=np.array([0, 1, 0, 1], np.int32),
+        t_compute=np.array([1e-3, 1e-3]),
+        t_dram=np.array([0.0, 0.0]),
+        t_noc=np.array([0.0, 0.0]),
+        dram_bytes=np.array([0.0, 0.0]),
+        messages=[],
+        **extra,
+    )
+
+
+ALL_WIRED = FixedPolicy([False, False, False, False])
+
+#: link 0 dies at layer 1 (one-way: the reverse link stays up)
+LINK0_DOWN = FaultScenario(link_failures=(
+    LinkFailure((0, 0), (0, 1), at_layer=1, both_directions=False),))
+
+
+def test_golden_link_failure_forces_wireless_failover():
+    """Layer 1's multicast MUST take the wireless plane: its only wired
+    link is dead.  Hand numbers: layer 0 unchanged (1 ms compute tie);
+    layer 1 = max(1 ms compute, 0.5 ms link 1, 4 MB / 12 GB/s wireless
+    = 1/3 ms) = 1 ms."""
+    sim = PacketSim(_golden_trace(), NET96, faults=LINK0_DOWN)
+    res = sim.run(ALL_WIRED)
+    assert res.total_time == pytest.approx(2e-3)
+    assert list(res.injected) == [False, False, True, False]
+    assert res.wireless_bytes == pytest.approx(4e6)
+    np.testing.assert_allclose(res.layer_times, [1e-3, 1e-3])
+
+
+def test_golden_link_failure_wired_only_pays_infinity():
+    """The wired-only counterfactual has no failover plane: the dead
+    cut's service time is infinite — wireless-as-failover is the
+    resilience headline, and this is its denominator."""
+    sim = PacketSim(_golden_trace(), NET96, faults=LINK0_DOWN)
+    res = sim.run_wired()
+    assert np.isinf(res.total_time)
+    # the pre-failure layer is still finite and exact
+    assert res.layer_times[0] == pytest.approx(1e-3)
+
+
+def test_golden_link_failure_online_path_matches():
+    """The per-packet (greedy) path agrees with the batched path on the
+    forced-failover trace: same total, same injected set."""
+    sim = PacketSim(_golden_trace(), NET96, faults=LINK0_DOWN)
+    res = sim.run("greedy")
+    assert res.total_time == pytest.approx(2e-3)
+    assert bool(res.injected[2])   # the dead-cut packet went wireless
+
+
+def test_golden_chip_failure_derating():
+    """Fail chiplet 1 at layer 1: layer 0 untouched; layer 1's compute
+    doubles (half the shares at zero rate -> total/capacity = 2) and
+    the dead half of the 8 MB weight slice restreams from DRAM."""
+    tr = _golden_trace(with_exec=True)
+    sc = FaultScenario(chip_failures=(ChipFailure(1, at_layer=1),))
+    d = derate_trace(tr, sc)
+    assert d is not tr
+    np.testing.assert_allclose(d.t_compute, [1e-3, 2e-3])
+    dram = tr.topo.config.dram_bw_total
+    np.testing.assert_allclose(d.t_dram, [0.0, 0.5 * 8e6 / dram])
+    # traffic geometry is untouched: the absorber adopts the router
+    np.testing.assert_array_equal(d.nbytes, tr.nbytes)
+
+
+def test_golden_chip_slowdown_derating():
+    """Halve chiplet 0's rate from layer 0: capacity = 0.5*0.5 + 0.5 =
+    0.75 -> every layer's compute inflates by 4/3.  No DRAM term — the
+    chip still holds its weights."""
+    tr = _golden_trace(with_exec=True)
+    sc = FaultScenario(chip_slowdowns=(ChipSlowdown(0, 2.0),))
+    d = derate_trace(tr, sc)
+    np.testing.assert_allclose(d.t_compute, [4e-3 / 3, 4e-3 / 3])
+    np.testing.assert_allclose(d.t_dram, [0.0, 0.0])
+
+
+def test_golden_fully_dead_exec_set_uses_emergency_absorber():
+    """Both chips dead: the layer falls back to one absorber at
+    single-chiplet rate -> total/max_share = 1/0.5 = 2x."""
+    tr = _golden_trace(with_exec=True)
+    sc = FaultScenario(chip_failures=(ChipFailure(0), ChipFailure(1)))
+    d = derate_trace(tr, sc)
+    np.testing.assert_allclose(d.t_compute, [2e-3, 2e-3])
+
+
+def test_chip_fault_without_exec_metadata_is_an_error():
+    tr = _golden_trace(with_exec=False)
+    sc = FaultScenario(chip_failures=(ChipFailure(0),))
+    with pytest.raises(ValueError, match="exec_chips"):
+        derate_trace(tr, sc)
+
+
+def test_unknown_link_raises():
+    tr = _golden_trace()
+    sc = FaultScenario(link_failures=(LinkFailure((0, 0), (5, 5)),))
+    with pytest.raises(ValueError, match="no mesh link"):
+        PacketSim(tr, NET96, faults=sc).run(ALL_WIRED)
+
+
+# ---------------------------------------------------------------------------
+# zero-degradation differential pin: bit-identical to fault-free
+# ---------------------------------------------------------------------------
+
+ZERO_MAGNITUDE = FaultScenario(
+    chip_slowdowns=(ChipSlowdown(0, 1.0),),
+    snr_fades=(SnrFade(0.0),))
+
+
+@pytest.mark.parametrize("wl", sorted(WORKLOADS))
+def test_zero_degradation_is_bit_identical(wl, traces_all=None):
+    """A scenario of zero-magnitude events (slow-down x1.0, 0 dB fade)
+    must reproduce the fault-free run EXACTLY — same floats, not just
+    close — on every paper workload.  This pins the engine's fault
+    threading as a pure no-op when nothing is degraded."""
+    tr = make_trace(wl)
+    base = PacketSim(tr, NET96).run("static")
+    faulted = PacketSim(tr, NET96, faults=ZERO_MAGNITUDE).run("static")
+    assert faulted.total_time == base.total_time
+    np.testing.assert_array_equal(faulted.layer_times, base.layer_times)
+    np.testing.assert_array_equal(faulted.injected, base.injected)
+
+
+def test_empty_scenario_short_circuits():
+    """`FaultScenario()` is null: the engine keeps no fault state at
+    all (the same code path as faults=None)."""
+    tr = make_trace("zfnet")
+    sim = PacketSim(tr, NET96, faults=FaultScenario())
+    assert sim.faults is None
+    assert sim.run("static").total_time == \
+        PacketSim(tr, NET96).run("static").total_time
+
+
+def test_adaptive_link_model_refuses_faults():
+    tr = make_trace("zfnet")
+    sc = FaultScenario(snr_fades=(SnrFade(3.0),))
+    with pytest.raises(NotImplementedError, match="adaptive"):
+        PacketSim(tr, NET96, link_model="adaptive", faults=sc)
+
+
+# ---------------------------------------------------------------------------
+# online-reshard domination: never slower than static or adaptive
+# ---------------------------------------------------------------------------
+
+def _random_scenario(tr, rng) -> FaultScenario:
+    n = tr.topo.config.n_chiplets
+    fails = tuple(ChipFailure(int(c), at_layer=int(rng.integers(
+        1, max(2, tr.n_layers))))
+        for c in rng.choice(n, size=rng.integers(0, 3), replace=False))
+    slows = (ChipSlowdown(int(rng.integers(0, n)),
+                          float(rng.uniform(1.5, 4.0)),
+                          at_layer=int(rng.integers(0, tr.n_layers))),)
+    fades = (SnrFade(float(rng.uniform(0.5, 12.0))),)
+    links = ()
+    if rng.random() < 0.5:
+        a, b = list(tr.link_index)[int(rng.integers(len(tr.link_index)))]
+        links = (LinkFailure(a, b, at_layer=int(
+            rng.integers(0, tr.n_layers))),)
+    return FaultScenario(chip_failures=fails, chip_slowdowns=slows,
+                         link_failures=links, snr_fades=fades)
+
+
+@pytest.mark.parametrize("wl,seed", [("zfnet", s) for s in range(4)]
+                         + [("gnmt", s) for s in range(2)])
+def test_online_reshard_never_slower(wl, seed):
+    """Property: under any injected scenario, the online-reshard
+    stitch is <= static's and <= adaptive's total.  Structural — its
+    candidate pool is a superset and the per-layer projections are
+    exact — but this guards the plumbing that keeps it true."""
+    tr = make_trace(wl)
+    sc = _random_scenario(tr, np.random.default_rng(seed))
+    sim = PacketSim(tr, NET96, faults=sc)
+    t_static = sim.run("static").total_time
+    t_adaptive = sim.run("adaptive").total_time
+    t_reshard = sim.run("online-reshard").total_time
+    assert t_reshard <= t_static * (1 + 1e-12)
+    assert t_reshard <= t_adaptive * (1 + 1e-12)
+
+
+def test_reshard_controller_never_ships_worse_than_degraded():
+    tr = make_trace("zfnet")
+    sc = default_scenario(tr, k=2, fade_db=9.0)
+    oc = reshard_run("zfnet", NET96, sc)
+    assert oc.total_time <= oc.degraded_time
+    assert oc.total_time == min(oc.resharded_time, oc.degraded_time)
+    # the heartbeat detected and evicted exactly the failed chips
+    fail_events = [e for e in oc.events if e.kind == "failure"]
+    detected = sorted(w for e in fail_events for w in e.workers)
+    assert detected == sorted(ev.chip for ev in sc.chip_failures)
+
+
+def test_reshard_infeasible_when_all_chips_die():
+    tr = make_trace("zfnet")
+    n = tr.topo.config.n_chiplets
+    sc = FaultScenario(chip_failures=tuple(
+        ChipFailure(c, at_layer=2) for c in range(n)))
+    oc = reshard_run("zfnet", NET96, sc)
+    assert not oc.resharded
+    assert oc.total_time == oc.degraded_time
+
+
+# ---------------------------------------------------------------------------
+# SNR / fading channel model closed forms and validation
+# ---------------------------------------------------------------------------
+
+def test_shannon_capacity_closed_form():
+    assert shannon_capacity(0.0) == pytest.approx(1.0)       # SNR = 1
+    assert shannon_capacity(10.0) == pytest.approx(np.log2(11.0))
+
+
+def test_capacity_scale_closed_form_and_zero_fade_identity():
+    prof = SnrProfile(ref_snr_db=15.0)
+    d = prof.ref_distance_mm
+    # 0 dB fade is EXACTLY 1.0 (the differential pin's wireless leg)
+    assert prof.capacity_scale(d, 0.0) == 1.0
+    want = shannon_capacity(15.0 - 6.0) / shannon_capacity(15.0)
+    assert prof.capacity_scale(d, 6.0) == pytest.approx(want)
+    assert 0.0 < prof.capacity_scale(d, 6.0) < 1.0
+
+
+def test_snr_path_loss_monotone_in_distance():
+    prof = SnrProfile()
+    d = np.array([10.0, 20.0, 40.0])
+    snr = prof.snr_db_at(d)
+    assert snr[0] == pytest.approx(prof.ref_snr_db)
+    assert np.all(np.diff(snr) < 0)
+    # inverse-square law: doubling distance costs ~6 dB
+    assert snr[0] - snr[1] == pytest.approx(20 * np.log10(2.0))
+
+
+def test_scenario_validation():
+    with pytest.raises(ValueError):
+        ChipSlowdown(0, 0.5)          # factor < 1 is a speedup
+    with pytest.raises(ValueError):
+        SnrFade(-1.0)                 # negative fade
+    with pytest.raises(ValueError):
+        SnrFade(float("inf"))
+    with pytest.raises(ValueError):
+        SnrProfile(ref_snr_db=0.0, path_loss_exp=-1.0)
+    sc = default_scenario(make_trace("zfnet"), k=2, fade_db=3.0)
+    assert len(sc.chip_failures) == 2
+    assert len({ev.chip for ev in sc.chip_failures}) == 2
+    with pytest.raises(ValueError, match="fail-stops"):
+        default_scenario(make_trace("zfnet"), k=99)
+
+
+def test_fade_reduces_wireless_only():
+    """A heavy package fade slows the hybrid run but leaves the wired
+    counterfactual untouched (fades live on the wireless plane)."""
+    tr = make_trace("zfnet")
+    sc = FaultScenario(snr_fades=(SnrFade(9.0),))
+    sim_f = PacketSim(tr, NET96, faults=sc)
+    sim_0 = PacketSim(tr, NET96)
+    assert sim_f.run_wired().total_time == sim_0.run_wired().total_time
+    assert sim_f.run("static").total_time >= \
+        sim_0.run("static").total_time
